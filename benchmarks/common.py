@@ -1,0 +1,45 @@
+"""Shared benchmark helpers: instance sets, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core import PartitionerConfig
+from repro.graphs import generators
+
+
+def bench_config(C: int = 256) -> PartitionerConfig:
+    return PartitionerConfig(contraction_limit=C, ip_repetitions=2,
+                             num_chunks=4)
+
+
+def instance_set(scale: str = "small") -> List[Tuple[str, object]]:
+    """(name, graph) pairs across the paper's three synthetic families
+    (+ ba as the complex-network proxy)."""
+    sizes = {"small": 4000, "medium": 20000, "large": 60000}[scale]
+    out = []
+    for fam, deg in [("rgg2d", 8), ("rgg3d", 8), ("rhg", 12), ("ba", 8)]:
+        g = generators.make(fam, sizes, deg, seed=17)
+        out.append((f"{fam}_{sizes}", g))
+    return out
+
+
+def timed(fn: Callable, repeats: int = 1):
+    vals = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        vals.append(time.perf_counter() - t0)
+    return out, min(vals)
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU perf —
+reported for regression tracking; roofline numbers come from the dry-run).
+Also prints the analytic VMEM footprint per tile, the quantity that
+matters for the TPU BlockSpec choice."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs import generators
+from repro.kernels.bsr_spmm.ops import graph_to_bsr, spmm
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.lp_gain.ops import lp_gain
+
+from .common import emit, timed
+
+
+def run() -> None:
+    g = generators.make("rgg2d", 2000, 8.0, seed=3)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 16, g.n)
+    cw = np.zeros(16, dtype=np.int64)
+    np.add.at(cw, labels, g.vweights)
+
+    _, dt = timed(lambda: lp_gain(g, labels, cw, float(cw.max() + 10),
+                                  row_tile=128), repeats=2)
+    # VMEM per tile: lab/w/tgt_w tiles (R, D) f32 + eq (R, D, D) f32
+    d_pad = 128
+    vmem = (3 * 128 * d_pad * 4 + 128 * d_pad * d_pad * 4) / 2**20
+    emit("kernels/lp_gain/rgg2d_2k", dt, f"vmem_tile_mb={vmem:.1f}")
+
+    x = rng.standard_normal((g.n, 128)).astype(np.float32)
+    _, dt = timed(lambda: spmm(g, x, bs=128), repeats=2)
+    col, vals, rb, nnz = graph_to_bsr(g, 128)
+    emit("kernels/bsr_spmm/rgg2d_2k", dt,
+         f"blocks={vals.shape[0]};density={g.m / max(1, vals.size):.4f};"
+         f"vmem_tile_mb={(2 * 128 * 128 * 4) / 2**20:.2f}")
+
+    idx = rng.integers(0, 10000, (256, 2)).astype(np.int32)
+    table = rng.standard_normal((10000, 64)).astype(np.float32)
+    _, dt = timed(lambda: embedding_bag(idx, table), repeats=2)
+    emit("kernels/embedding_bag/256x2", dt, "vmem_tile_mb=0.06")
+
+
+if __name__ == "__main__":
+    run()

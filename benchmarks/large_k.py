@@ -1,0 +1,67 @@
+"""Paper Table 2 analog (large k): feasibility and relative cut/time for
+k in {2^6, 2^8, 2^10} (scaled to laptop n; the paper uses 2^10..2^20 at
+cluster n). Deep MGP must stay 100% feasible; plain MGP degrades because
+the coarsest graph (C*k vertices) stops being small."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import baselines, metrics, partition
+from repro.core.deep_mgp import PartitionerConfig
+
+from .common import emit, geomean, instance_set
+
+
+def run(scale: str = "small", ks=(64, 256, 1024), out_json=None) -> Dict:
+    # small C so that n/C supports large k (paper: C=2000 at n=2^26+)
+    cfg = PartitionerConfig(contraction_limit=32, ip_repetitions=1,
+                            num_chunks=4)
+    rows = []
+    for name, g in instance_set(scale):
+        for k in ks:
+            if k * 4 > g.n:
+                continue
+            rec = {"instance": name, "k": k, "algos": {}}
+            for aname, fn in {
+                "deep": lambda: partition(g, k, config=cfg),
+                "plain": lambda: baselines.plain_mgp(
+                    g, k, cfg=dataclasses.replace(cfg, contraction_limit=8)),
+                "single_lp": lambda: baselines.single_level_lp(g, k),
+            }.items():
+                t0 = time.perf_counter()
+                part = fn()
+                dt = time.perf_counter() - t0
+                s = metrics.summarize(g, part, k, 0.03)
+                rec["algos"][aname] = {"cut": s["cut"], "time": dt,
+                                       "feasible": s["feasible"],
+                                       "imbalance": s["imbalance"],
+                                       "nonempty": s["nonempty_blocks"]}
+            rows.append(rec)
+            d = rec["algos"]["deep"]
+            emit(f"large_k/{name}/k{k}/deep", d["time"],
+                 f"cut={d['cut']};feas={d['feasible']};"
+                 f"nonempty={d['nonempty']}")
+    summary = {}
+    for a in ("deep", "plain", "single_lp"):
+        feas = [r["algos"][a]["feasible"] for r in rows]
+        rel = [r["algos"][a]["cut"] /
+               max(r["algos"]["deep"]["cut"], 1) for r in rows]
+        summary[a] = {"n_feasible": int(np.sum(feas)), "n_total": len(feas),
+                      "gmean_rel_cut": geomean(rel)}
+        emit(f"large_k/summary/{a}", 0.0,
+             f"feasible={summary[a]['n_feasible']}/{summary[a]['n_total']};"
+             f"rel_cut={summary[a]['gmean_rel_cut']:.3f}")
+    result = {"rows": rows, "summary": summary}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""§Perf hillclimb artifacts.
+
+1. Paper-representative cell (gat-cora x ogb-scale full graph): quantify
+   the collective-term reduction bought by partitioner placement — halo
+   bytes per layer exchange, naive contiguous split vs deep-MGP blocks,
+   at P=256 (the single-pod device count). Run on a same-family proxy
+   graph sized for this host; the halo term scales linearly.
+2. Emits the measured numbers as CSV for EXPERIMENTS.md §Perf-hillclimb.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.partitioner import PartitionerConfig
+from repro.graphs import generators
+from repro.graphs.format import permute
+from repro.placement import gnn_placement
+
+from .common import emit
+
+
+def run(n: int = 100_000, P: int = 256, d_feat: int = 100,
+        out_json: str | None = None):
+    g = generators.make("rgg2d", n, 16.0, seed=31)
+    rng = np.random.default_rng(0)
+    g, _ = permute(g, rng.permutation(g.n))   # destroy free locality
+    cfg = PartitionerConfig(contraction_limit=256, ip_repetitions=1,
+                            num_chunks=4)
+    t0 = time.time()
+    plan = gnn_placement.plan(g, P, config=cfg)
+    dt = time.time() - t0
+    # collective term: per-layer halo exchange moves halo entries x
+    # d_feat floats; term = bytes/(P * link_bw)
+    link_bw = 50e9
+    naive = plan.baseline_halo_bytes / 4 * d_feat * 4
+    part = plan.halo_bytes / 4 * d_feat * 4
+    t_naive = naive / (P * link_bw)
+    t_part = part / (P * link_bw)
+    res = {
+        "n": g.n, "m": g.m, "P": P,
+        "cut": plan.cut,
+        "halo_entries_naive": plan.baseline_halo_bytes // 4,
+        "halo_entries_partitioned": plan.halo_bytes // 4,
+        "reduction_x": plan.baseline_halo_bytes / max(plan.halo_bytes, 1),
+        "collective_term_naive_s": t_naive,
+        "collective_term_partitioned_s": t_part,
+        "partition_time_s": dt,
+    }
+    emit(f"perf/gnn_halo/P{P}", dt,
+         f"halo_reduction={res['reduction_x']:.2f}x;"
+         f"coll_term {t_naive:.4f}s->{t_part:.4f}s")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(res, f, indent=1)
+    print(json.dumps(res), flush=True)
+    return res
+
+
+if __name__ == "__main__":
+    run(n=int(sys.argv[1]) if len(sys.argv) > 1 else 100_000,
+        out_json="artifacts/perf_gnn_halo.json")

@@ -1,0 +1,93 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh)
+from the dry-run artifacts (launch/dryrun.py --out artifacts/dryrun).
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute_term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory_term     = HLO_bytes_per_device / HBM_bw
+  collective_term = collective_bytes_per_device / link_bw
+
+cost_analysis() reports the per-device SPMD program, so no further
+division by chip count is needed. For LM cells the scan-corrected flops
+(1/2-layer unrolled probes) are used — lax.scan hides the per-layer body
+from cost_analysis. MODEL_FLOPS is the analytic 6·N·D (total, all chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / link
+
+
+def load_cells(art_dir: str) -> List[Dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    cost = cell.get("cost_analysis", {})
+    if "flops" not in cost:
+        return None
+    n_dev = cell["n_devices"]
+    flops_dev = cell.get("hlo_flops_per_device_corrected") or cost["flops"]
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll_dev = sum(v["bytes"] for v in cell.get("collectives", {}).values())
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    model_flops = cell.get("model_flops") or 0.0
+    hlo_total = flops_dev * n_dev
+    bound = max(t_compute, t_memory, t_coll)
+    # roofline fraction: useful model flops vs what the dominant resource
+    # could deliver in the time the program occupies it
+    frac = (model_flops / n_dev / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "mesh": "x".join(map(str, cell["mesh"])),
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_total": hlo_total,
+        "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": frac,
+        "temp_gb_per_dev":
+            cell["memory_analysis"].get("temp_size_bytes", 0) / 1e9,
+    }
+
+
+def run(art_dir: str = "artifacts/dryrun", out_md: Optional[str] = None
+        ) -> List[Dict]:
+    rows = [r for r in (roofline_row(c) for c in load_cells(art_dir)) if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    hdr = ("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+           "useful_ratio,roofline_fraction,temp_gb")
+    print(hdr)
+    lines = [hdr]
+    for r in rows:
+        line = (f"{r['arch']},{r['shape']},{r['mesh']},"
+                f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+                f"{r['collective_s']:.4g},{r['dominant']},"
+                f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+                f"{r['temp_gb_per_dev']:.1f}")
+        print(line)
+        lines.append(line)
+    if out_md:
+        with open(out_md, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun",
+        out_md=sys.argv[2] if len(sys.argv) > 2 else None)

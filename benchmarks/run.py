@@ -1,0 +1,57 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+Sections:
+  quality        — Fig 2a/b: deep vs plain vs single-level LP edge cuts
+  large_k        — Table 2: feasibility at large k
+  balancer       — §4 Balancing: repair of adversarial imbalance
+  scaling        — Fig 4-6: weak/strong scaling over simulated PEs
+  kernels        — Pallas kernel micro-bench + VMEM tile accounting
+  roofline       — §Roofline table (needs artifacts/dryrun from
+                   ``python -m repro.launch.dryrun --all --out ...``)
+
+``python -m benchmarks.run [--fast] [--sections a,b,c]``
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smallest instances (CI mode)")
+    ap.add_argument("--sections", default="quality,large_k,balancer,"
+                    "kernels,scaling")
+    args = ap.parse_args()
+    sections = args.sections.split(",")
+    print("name,us_per_call,derived")
+
+    if "quality" in sections:
+        from . import quality
+        quality.run(scale="small", ks=(2, 8, 32),
+                    seeds=(0,) if args.fast else (0, 1))
+    if "large_k" in sections:
+        from . import large_k
+        large_k.run(ks=(64, 256) if args.fast else (64, 256, 1024))
+    if "balancer" in sections:
+        from . import balancer_stats
+        balancer_stats.run()
+    if "kernels" in sections:
+        from . import kernels_bench
+        kernels_bench.run()
+    if "scaling" in sections:
+        from . import scaling
+        scaling.run(pes=(1, 2, 4) if args.fast else (1, 2, 4, 8))
+    if "roofline" in sections:
+        from . import roofline
+        if os.path.isdir("artifacts/dryrun"):
+            roofline.run("artifacts/dryrun")
+        else:
+            print("roofline,0,skipped (run repro.launch.dryrun --all "
+                  "--out artifacts/dryrun first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Figures 4-6 analog: weak/strong scaling of the distributed
+partitioner over simulated PEs (forced host devices, subprocess per PE
+count since jax locks the device count at first init).
+
+On a 1-core host wall-clock "speedup" is meaningless; what this bench
+establishes is (a) the SPMD program runs at every PE count, (b) the
+*communication volume per PE* stays ~constant under weak scaling (the
+scalability argument of the paper), (c) quality does not degrade with P.
+Halo volume == the sparse-all-to-all payload of §5.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import json, os, sys, time
+import numpy as np
+P = int(sys.argv[1]); mode = sys.argv[2]; n = int(sys.argv[3])
+k = int(sys.argv[4])
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           f" --xla_force_host_platform_device_count={P}")
+from repro.core import PartitionerConfig, metrics
+from repro.dist.dist_partitioner import dist_partition
+from repro.graphs import generators
+from repro.graphs.distribute import distribute_graph
+cfg = PartitionerConfig(contraction_limit=128, ip_repetitions=1,
+                        num_chunks=4)
+g = generators.make("rgg2d", n, 8.0, seed=23)
+shards = distribute_graph(g, P)
+t0 = time.perf_counter()
+part = dist_partition(g, k, P, cfg=cfg)
+dt = time.perf_counter() - t0
+print(json.dumps({
+    "P": P, "mode": mode, "n": g.n, "m": g.m, "k": k,
+    "time_s": dt, "cut": metrics.edge_cut(g, part),
+    "feasible": metrics.is_feasible(g, part, k, 0.03),
+    "halo_bytes_total": shards.comm_bytes_per_halo(),
+    "halo_bytes_per_pe": shards.comm_bytes_per_halo() / P,
+    "edges_per_s": g.m / dt,
+}))
+"""
+
+
+def _run_child(P, mode, n, k) -> Dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(P), mode, str(n), str(k)],
+        capture_output=True, text=True, env=env, timeout=560)
+    lines = [l for l in proc.stdout.splitlines() if l.startswith("{")]
+    assert proc.returncode == 0 and lines, proc.stderr[-2000:]
+    return json.loads(lines[-1])
+
+
+def run(pes=(1, 2, 4, 8), n_per_pe=2000, n_strong=8000, k=16,
+        out_json=None) -> Dict:
+    from .common import emit
+    weak, strong = [], []
+    for P in pes:
+        r = _run_child(P, "weak", n_per_pe * P, k)
+        weak.append(r)
+        emit(f"scaling/weak/P{P}", r["time_s"],
+             f"n={r['n']};cut={r['cut']};feas={r['feasible']};"
+             f"halo_per_pe={r['halo_bytes_per_pe']:.0f}")
+    for P in pes:
+        r = _run_child(P, "strong", n_strong, k)
+        strong.append(r)
+        emit(f"scaling/strong/P{P}", r["time_s"],
+             f"cut={r['cut']};feas={r['feasible']};"
+             f"halo_per_pe={r['halo_bytes_per_pe']:.0f}")
+    result = {"weak": weak, "strong": strong}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run(out_json="artifacts/scaling.json"
+        if os.path.isdir("artifacts") else None)

@@ -1,0 +1,22 @@
+"""Quickstart: partition a graph with dKaMinPar-JAX and inspect quality.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import partition
+from repro.core.metrics import summarize
+from repro.core.baselines import single_level_lp
+from repro.graphs import generators
+
+# 1. make (or load) a graph — here: random geometric, 20k vertices
+g = generators.make("rgg2d", 20000, 8.0, seed=0)
+print(f"graph: n={g.n} m={g.m}")
+
+# 2. partition into 16 blocks, 3% imbalance (paper defaults)
+part = partition(g, k=16, epsilon=0.03, seed=0)
+print("deep MGP:   ", summarize(g, part, 16, 0.03))
+
+# 3. compare against single-level label propagation (XtraPuLP-like)
+flat = single_level_lp(g, 16)
+print("single-level:", summarize(g, flat, 16, 0.03))

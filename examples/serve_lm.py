@@ -1,0 +1,50 @@
+"""Serve a small LM with batched KV-cache decoding (prefill + decode),
+greedy sampling over batched requests.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import load_all
+from repro.models import transformer as T
+from repro.models.common import init_params
+
+entry = load_all()["qwen2-7b"]
+cfg = entry.smoke_config
+params = init_params(T.build_specs(cfg), jax.random.key(0))
+
+B, prompt_len, gen_len, max_len = 4, 12, 20, 64
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(1, cfg.vocab, (B, prompt_len)),
+                      jnp.int32)
+
+# prefill: run the prompt through decode steps to fill the cache
+cache = jax.tree_util.tree_map(
+    jnp.zeros_like, init_params(T.cache_specs(cfg, B, max_len),
+                                jax.random.key(1)))
+decode = jax.jit(lambda p, c, t, l: T.decode_step(p, c, t, l, cfg))
+t0 = time.time()
+logits = None
+for t in range(prompt_len):
+    logits, cache = decode(params, cache, prompts[:, t],
+                           jnp.full((B,), t, jnp.int32))
+
+# greedy generation
+out = []
+tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+for t in range(prompt_len, prompt_len + gen_len):
+    out.append(tok)
+    logits, cache = decode(params, cache, tok,
+                           jnp.full((B,), t, jnp.int32))
+    tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+dt = time.time() - t0
+toks = np.stack([np.asarray(t) for t in out], axis=1)
+print(f"generated {B}x{gen_len} tokens in {dt:.1f}s "
+      f"({B * (gen_len + prompt_len) / dt:.0f} tok/s incl. compile)")
+print("sample token ids:", toks[0].tolist())
+assert toks.shape == (B, gen_len)
+assert (toks >= 0).all() and (toks < cfg.vocab).all()

@@ -1,0 +1,4 @@
+"""repro: dKaMinPar (Distributed Deep Multilevel Graph Partitioning) in JAX,
+embedded as the placement engine of a multi-pod TPU training/serving
+framework."""
+__version__ = "0.1.0"

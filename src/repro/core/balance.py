@@ -1,0 +1,143 @@
+"""Greedy global balancing (paper §4, Balancing).
+
+TPU-native adaptation of the PQ + binary-tree-reduction scheme:
+
+  * per-PE priority queues        ->  ``lax.top_k`` over relative gains
+    (a PQ is only ever popped from the top; top-k is the array equivalent
+    and the queue-size invariant is the pool size ``top_m``)
+  * binary tree reduction + root  ->  gather of per-shard top lists + the
+    decides + broadcast               same deterministic greedy selection
+                                      executed redundantly everywhere
+  * "update gains of neighbors"   ->  gains recomputed per round (rounds
+                                      are few; the paper assumes few moves
+                                      suffice, so recompute is cheap)
+
+Relative gain (paper): g·c(v) if g >= 0 else g/c(v) where g is the best
+cut reduction over targets that would not become overloaded. Moving to any
+*non-adjacent* block has g = -own_connection; the lightest such block is
+always a valid fallback because L_max >= c(V)/k + max_v c(v), which is what
+guarantees termination (feasibility is always reachable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.format import Graph
+from . import lp
+from .lp import I32_MAX, _argmax_target, _group_conns, _own_connection
+
+NEG_INF = np.float32(-np.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "top_m", "restricted"))
+def balance_round(labels, block_w, l_max, parent, src, dst, w, vweights,
+                  salt, *, n, top_m, restricted=False):
+    """One global balancing round. Returns (labels, block_w, still_overloaded).
+
+    All arrays over vertices have size n+1 (sentinel slot n)."""
+    k = block_w.shape[0]
+    over = block_w > l_max
+    lab_dst = labels[dst]
+    s_src, s_lab, s_w = jax.lax.sort((src, lab_dst, w), num_keys=2)
+    conn = _group_conns(s_src, s_lab, s_w)
+    own_lab = labels[s_src]
+    # target must not become overloaded (fits) and differ from own block
+    fits = (block_w[s_lab] + vweights[s_src] <= l_max[s_lab])
+    valid = fits & (s_lab != own_lab)
+    if restricted:
+        valid &= parent[s_lab] == parent[own_lab]
+    score = jnp.where(valid, conn, -1)
+    best, target = _argmax_target(s_src, s_lab, score, block_w[s_lab], salt, n)
+    own_conn = _own_connection(s_src, s_lab, s_w, labels, n)
+
+    has_adj = (best >= 0) & (target < I32_MAX)
+    tgt_adj = jnp.where(has_adj, target, 0)
+    gain_adj = best - own_conn
+
+    if restricted:
+        # fallback target: the lightest sibling within the own parent group
+        # (O(k) via segment-min over blocks grouped by parent)
+        grp_min = jax.ops.segment_min(block_w, parent, num_segments=k)
+        is_min = block_w == grp_min[parent]
+        bid = jnp.where(is_min, jnp.arange(k, dtype=jnp.int32), I32_MAX)
+        grp_argmin = jax.ops.segment_min(bid, parent, num_segments=k)
+        fb_t = grp_argmin[parent[labels]]
+    else:
+        fb_t = jnp.full((n + 1,), jnp.argmin(block_w).astype(jnp.int32))
+    fb_ok = (block_w[fb_t] + vweights <= l_max[fb_t]) & (fb_t != labels)
+    gain_fb = -own_conn
+
+    use_adj = has_adj
+    tgt = jnp.where(use_adj, tgt_adj, fb_t)
+    g = jnp.where(use_adj, gain_adj, gain_fb)
+    movable = over[labels] & (has_adj | fb_ok)
+    movable = movable.at[n].set(False)
+
+    gf = g.astype(jnp.float32)
+    cv = jnp.maximum(vweights.astype(jnp.float32), 1.0)
+    rel = jnp.where(g >= 0, gf * cv, gf / cv)
+    rel = jnp.where(movable, rel, NEG_INF)
+    vals, vidx = jax.lax.top_k(rel, top_m)
+
+    def body(i, carry):
+        block_w, labels = carry
+        v = vidx[i]
+        t = tgt[v]
+        b = labels[v]
+        cw = vweights[v]
+        ok = (vals[i] > NEG_INF) & (block_w[b] > l_max[b]) & \
+             (block_w[t] + cw <= l_max[t]) & (t != b)
+        cwd = jnp.where(ok, cw, 0)
+        block_w = block_w.at[b].add(-cwd).at[t].add(cwd)
+        labels = labels.at[v].set(jnp.where(ok, t, b))
+        return block_w, labels
+
+    block_w, labels = jax.lax.fori_loop(0, top_m, body, (block_w, labels))
+    return labels, block_w, jnp.any(block_w > l_max)
+
+
+def rebalance(g: Graph,
+              part: np.ndarray,
+              l_max_vec: np.ndarray,
+              parent: Optional[np.ndarray] = None,
+              top_m: int = 128,
+              max_rounds: int = 200,
+              seed: int = 0) -> np.ndarray:
+    """Host driver: run balance rounds until feasible. ``part`` is (n,) block
+    ids; ``l_max_vec`` is (k,) per-block budgets."""
+    n = g.n
+    k = int(l_max_vec.shape[0])
+    chunks = lp.build_chunks(g, 1)
+    n_pad = chunks.n_pad
+    top_m = min(top_m, n_pad + 1)
+    labels = np.zeros(n_pad + 1, dtype=np.int32)
+    labels[:n] = part
+    vw = np.zeros(n_pad + 1, dtype=np.int32)
+    vw[:n] = g.vweights
+    from .refinement import pad_blocks
+    block_w = np.zeros(k, dtype=np.int64)
+    np.add.at(block_w, part, g.vweights)
+    bw_p, lv_p, pr_p, _ = pad_blocks(block_w, l_max_vec, parent)
+    labels = jnp.asarray(labels)
+    vw_j = jnp.asarray(vw)
+    block_w = jnp.asarray(bw_p)
+    l_max_j = jnp.asarray(lv_p)
+    parent_j = jnp.asarray(pr_p)
+    restricted = parent is not None
+    src = jnp.asarray(chunks.src[0])
+    dst = jnp.asarray(chunks.dst[0])
+    w = jnp.asarray(chunks.w[0])
+    if bool(np.any(np.asarray(block_w) > np.asarray(l_max_j))):
+        for r in range(max_rounds):
+            labels, block_w, overloaded = balance_round(
+                labels, block_w, l_max_j, parent_j, src, dst, w, vw_j,
+                jnp.uint32((seed * 7919 + r) % (2**32)), n=n_pad, top_m=top_m,
+                restricted=restricted)
+            if not bool(overloaded):
+                break
+    return np.asarray(labels)[:n].astype(np.int64)

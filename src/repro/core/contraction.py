@@ -1,0 +1,29 @@
+"""Cluster contraction (paper §5, Graph Contraction) — host side.
+
+Deduplicates inter-cluster arcs and accumulates vertex/edge weights. The
+distributed version (dist/dist_partitioner.py) adds the cluster->PE
+assignment and the all-to-all edge exchange; the sequential kernel below is
+shared by both (per-PE local contraction)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from ..graphs.format import Graph, from_coo
+
+
+def contract(g: Graph, labels: np.ndarray) -> Tuple[Graph, np.ndarray]:
+    """Contract clustering ``labels`` (arbitrary ids). Returns
+    (coarse_graph, fine_to_coarse) with fine_to_coarse[v] in [0, n_c)."""
+    uniq, cl = np.unique(labels, return_inverse=True)
+    nc = int(uniq.size)
+    cvw = np.zeros(nc, dtype=np.int64)
+    np.add.at(cvw, cl, g.vweights)
+    src = g.arc_tails()
+    csrc = cl[src]
+    cdst = cl[g.adjncy]
+    keep = csrc != cdst
+    gc = from_coo(nc, csrc[keep], cdst[keep], eweights=g.eweights[keep],
+                  vweights=cvw, symmetrize=False, dedup=True)
+    return gc, cl.astype(np.int64)

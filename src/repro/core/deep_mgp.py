@@ -1,0 +1,179 @@
+"""Deep multilevel graph partitioning driver (paper Algorithm 1).
+
+Single-process reference driver; dist/dist_partitioner.py runs the same
+phases under shard_map. The driver is host Python (dynamic level shapes)
+around jitted per-level programs — see DESIGN.md §2 (Static shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..graphs.format import Graph, from_coo
+from . import metrics
+from .coarsening import cluster
+from .contraction import contract
+from .initial_partition import (bipartition, distribute_counts,
+                                partition_into_counts, split_count)
+from .refinement import balance_and_refine
+
+log = logging.getLogger("repro.deep_mgp")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionerConfig:
+    """dKaMinPar-Fast defaults (paper §6: C=2000, 3 LP iterations);
+    the Strong preset uses C=5000 / 5 iterations."""
+    contraction_limit: int = 2000          # C
+    initial_k: int = 2                     # K (bipartitioning base case)
+    epsilon: float = 0.03
+    cluster_iterations: int = 3
+    refine_iterations: int = 2
+    num_chunks: int = 8
+    ip_repetitions: int = 3
+    max_levels: int = 64
+    min_shrink: float = 0.95               # stop coarsening if n_c/n above
+    seed: int = 0
+
+
+def ceil2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+def _l_vec(block_k: np.ndarray, l_final: int) -> np.ndarray:
+    return block_k.astype(np.int64) * int(l_final)
+
+
+def extract_block_subgraphs(g: Graph, part: np.ndarray, nb: int
+                            ) -> Tuple[List[Graph], List[np.ndarray]]:
+    """All block-induced subgraphs in one O(m log m) pass.
+
+    Returns (graphs, old_ids) lists indexed by block."""
+    counts = np.bincount(part, minlength=nb)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    order = np.argsort(part, kind="stable")      # vertices grouped by block
+    local = np.empty(g.n, dtype=np.int64)
+    local[order] = np.arange(g.n) - starts[part[order]]
+    src = g.arc_tails()
+    keep = part[src] == part[g.adjncy]
+    ksrc, kdst, kw = src[keep], g.adjncy[keep], g.eweights[keep]
+    kblk = part[ksrc]
+    eorder = np.argsort(kblk, kind="stable")
+    ksrc, kdst, kw, kblk = ksrc[eorder], kdst[eorder], kw[eorder], kblk[eorder]
+    ecounts = np.bincount(kblk, minlength=nb)
+    estarts = np.concatenate([[0], np.cumsum(ecounts)])
+    graphs, ids = [], []
+    for b in range(nb):
+        v0, v1 = starts[b], starts[b + 1]
+        e0, e1 = estarts[b], estarts[b + 1]
+        old = order[v0:v1]
+        sub = from_coo(int(counts[b]), local[ksrc[e0:e1]], local[kdst[e0:e1]],
+                       eweights=kw[e0:e1], vweights=g.vweights[old],
+                       symmetrize=False, dedup=False)
+        graphs.append(sub)
+        ids.append(old)
+    return graphs, ids
+
+
+def extend_partition(g: Graph, part: np.ndarray, block_k: np.ndarray,
+                     k: int, l_final: int, cfg: PartitionerConfig,
+                     rng: np.random.Generator, target_blocks: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper Algorithm 1 lines 13–18: while |Pi| < target, split every
+    splittable block via (gathered) sequential bipartitioning, then refine
+    restricted to siblings."""
+    while block_k.shape[0] < target_blocks and np.any(block_k > 1):
+        nb = block_k.shape[0]
+        graphs, ids = extract_block_subgraphs(g, part, nb)
+        new_part = np.empty(g.n, dtype=np.int64)
+        new_counts: List[int] = []
+        parent: List[int] = []
+        off = 0
+        for b in range(nb):
+            if block_k[b] <= 1:
+                new_part[ids[b]] = off
+                new_counts.append(1)
+                parent.append(b)
+                off += 1
+                continue
+            k1, k2 = split_count(int(block_k[b]))
+            half = bipartition(graphs[b], k1, k2, l_final, rng,
+                               cfg.ip_repetitions)
+            new_part[ids[b]] = off + half
+            new_counts.extend([k1, k2])
+            parent.extend([b, b])
+            off += 2
+        block_k = np.asarray(new_counts, dtype=np.int64)
+        part = new_part
+        # sibling-restricted refinement pass (cheap cleanup of the split)
+        lv = _l_vec(block_k, l_final)
+        part = balance_and_refine(g, part, lv,
+                                  parent=np.asarray(parent, dtype=np.int64),
+                                  num_iterations=1,
+                                  num_chunks=cfg.num_chunks,
+                                  seed=cfg.seed + off)
+    return part, block_k
+
+
+def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None
+              ) -> np.ndarray:
+    """Deep multilevel k-way partition. Returns block ids (n,)."""
+    cfg = cfg or PartitionerConfig()
+    rng = np.random.default_rng(cfg.seed)
+    total_c = g.total_vweight
+    max_c = int(g.vweights.max()) if g.n else 1
+    l_final = metrics.l_max(total_c, k, cfg.epsilon, max_c)
+    C, K = cfg.contraction_limit, cfg.initial_k
+
+    # ---- deep coarsening (lines 6–8) -----------------------------------
+    hierarchy: List[Tuple[Graph, np.ndarray]] = []
+    G = g
+    level = 0
+    while G.n > C * min(k, K) and level < cfg.max_levels:
+        kprime = max(1, min(k, G.n // max(1, C)))
+        W = max(1, int(cfg.epsilon * total_c / kprime))
+        labels = cluster(G, W, num_iterations=cfg.cluster_iterations,
+                         num_chunks=cfg.num_chunks, seed=cfg.seed + level)
+        Gc, mapping = contract(G, labels)
+        log.info("level %d: n=%d -> n_c=%d (W=%d)", level, G.n, Gc.n, W)
+        if Gc.n >= G.n * cfg.min_shrink:
+            break  # converged — coarsest level reached
+        hierarchy.append((G, mapping))
+        G = Gc
+        level += 1
+
+    # ---- initial partition of the coarsest graph (base case) -----------
+    k0 = max(1, min(k, K))
+    counts = distribute_counts(k, k0)
+    part = partition_into_counts(G, counts, l_final, rng,
+                                 cfg.ip_repetitions)
+    block_k = np.asarray(counts, dtype=np.int64)
+    part = balance_and_refine(G, part, _l_vec(block_k, l_final),
+                              num_iterations=cfg.refine_iterations,
+                              num_chunks=cfg.num_chunks, seed=cfg.seed)
+
+    # ---- uncoarsening: project, extend, refine (lines 7–9, 13–18) ------
+    for (Gf, mapping) in reversed(hierarchy):
+        part = part[mapping]
+        target = min(k, ceil2(max(1, Gf.n // max(1, C))))
+        target = max(target, block_k.shape[0])
+        part, block_k = extend_partition(Gf, part, block_k, k, l_final,
+                                         cfg, rng, target)
+        part = balance_and_refine(Gf, part, _l_vec(block_k, l_final),
+                                  num_iterations=cfg.refine_iterations,
+                                  num_chunks=cfg.num_chunks,
+                                  seed=cfg.seed + Gf.n % 1000003)
+
+    # ---- final extension to exactly k blocks (omitted-case in Alg. 1) --
+    part, block_k = extend_partition(g, part, block_k, k, l_final, cfg,
+                                     rng, target_blocks=k)
+    if block_k.shape[0] < k:  # blocks that cannot split further (tiny n)
+        pad = k - block_k.shape[0]
+        block_k = np.concatenate([block_k, np.ones(pad, dtype=np.int64)])
+    part = balance_and_refine(g, part, np.full(k, l_final, dtype=np.int64),
+                              num_iterations=cfg.refine_iterations,
+                              num_chunks=cfg.num_chunks, seed=cfg.seed + 17)
+    return part

@@ -1,0 +1,47 @@
+"""Public partitioner API."""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..graphs.format import Graph
+from . import metrics
+from .deep_mgp import PartitionerConfig, partition as _partition
+
+
+def fast_config(seed: int = 0, **overrides) -> PartitionerConfig:
+    """dKaMinPar-Fast (paper §6): C=2000, 3 LP iterations."""
+    return PartitionerConfig(contraction_limit=overrides.pop(
+        "contraction_limit", 2000), cluster_iterations=overrides.pop(
+        "cluster_iterations", 3), seed=seed, **overrides)
+
+
+def strong_config(seed: int = 0, **overrides) -> PartitionerConfig:
+    """dKaMinPar-Strong (paper §6): C=5000, 5 LP iterations, more reps."""
+    return PartitionerConfig(contraction_limit=overrides.pop(
+        "contraction_limit", 5000), cluster_iterations=overrides.pop(
+        "cluster_iterations", 5), ip_repetitions=overrides.pop(
+        "ip_repetitions", 6), refine_iterations=overrides.pop(
+        "refine_iterations", 3), seed=seed, **overrides)
+
+
+def partition(g: Graph, k: int,
+              epsilon: float = 0.03,
+              config: Optional[PartitionerConfig] = None,
+              seed: int = 0) -> np.ndarray:
+    """Deep multilevel k-way partition of ``g`` into ``k`` blocks.
+
+    Returns an (n,) int64 array of block ids. The result always satisfies
+    the paper's (relaxed) balance constraint — validated by
+    ``metrics.is_feasible``.
+    """
+    if config is None:
+        config = fast_config(seed=seed, epsilon=epsilon)
+    if k <= 1:
+        return np.zeros(g.n, dtype=np.int64)
+    return _partition(g, k, config)
+
+
+__all__ = ["partition", "fast_config", "strong_config", "PartitionerConfig",
+           "metrics"]

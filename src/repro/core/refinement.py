@@ -1,0 +1,101 @@
+"""k-way refinement driver: balance -> LP refine -> balance (paper §4)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.format import Graph, degree_bucket_order, permute
+from . import balance as bal
+from . import lp
+
+_BIG_W = np.int32(2**30)
+_BIG_L = np.int32(2**31 - 1)
+
+
+def pad_blocks(block_w: np.ndarray, l_max_vec: np.ndarray,
+               parent: Optional[np.ndarray], min_bucket: int = 64
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pad the block count to a power-of-two bucket (>= min_bucket) with
+    unreachable dummy blocks so jitted programs are shared across k:
+    dummies are heavy (never the lightest fallback), have infinite budget
+    (never overloaded) and are adjacent to no vertex (never a target)."""
+    k = int(block_w.shape[0])
+    k_pad = max(min_bucket, 1 << max(0, (k - 1)).bit_length())
+    if k_pad == k:
+        p = parent if parent is not None else np.arange(k)
+        return (block_w.astype(np.int32),
+                np.minimum(l_max_vec, _BIG_L).astype(np.int32),
+                p.astype(np.int32), k)
+    bw = np.full(k_pad, _BIG_W, dtype=np.int32)
+    bw[:k] = block_w
+    lv = np.full(k_pad, _BIG_L, dtype=np.int32)
+    lv[:k] = np.minimum(l_max_vec, _BIG_L)
+    pr = np.arange(k_pad, dtype=np.int32)
+    if parent is not None:
+        pr[:k] = parent
+    else:
+        pr[:k] = np.arange(k)
+    return bw, lv, pr, k
+
+
+def lp_refine(g: Graph,
+              part: np.ndarray,
+              l_max_vec: np.ndarray,
+              parent: Optional[np.ndarray] = None,
+              num_iterations: int = 2,
+              num_chunks: int = 8,
+              seed: int = 0) -> np.ndarray:
+    """Chunked size-constrained LP refinement (jitted inner loops)."""
+    n = g.n
+    k = int(l_max_vec.shape[0])
+    if n == 0 or k <= 1:
+        return part
+    rng = np.random.default_rng(seed)
+    order = degree_bucket_order(g, rng)
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    g2, _ = permute(g, perm)
+    part2 = np.empty(n, dtype=np.int64)
+    part2[perm] = part  # part2[new_id] = part[old_id]
+    chunks = lp.build_chunks(g2, num_chunks)
+    n_pad = chunks.n_pad
+    labels = np.zeros(n_pad + 1, dtype=np.int32)
+    labels[:n] = part2
+    vw = np.zeros(n_pad + 1, dtype=np.int32)
+    vw[:n] = g2.vweights
+    block_w = np.zeros(k, dtype=np.int64)
+    np.add.at(block_w, part, g.vweights)
+    bw_p, lv_p, pr_p, _ = pad_blocks(block_w, l_max_vec, parent)
+    labels = jnp.asarray(labels)
+    vw_j = jnp.asarray(vw)
+    block_w = jnp.asarray(bw_p)
+    l_max_j = jnp.asarray(lv_p)
+    parent_j = jnp.asarray(pr_p)
+    restricted = parent is not None
+    for it in range(num_iterations):
+        labels, block_w = lp.refine_iteration(
+            labels, block_w, l_max_j, parent_j,
+            jnp.asarray(chunks.src), jnp.asarray(chunks.dst),
+            jnp.asarray(chunks.w), vw_j,
+            jnp.uint32((seed * 2654435761 + it) % (2**32)), n=n_pad,
+            restricted=restricted)
+    out2 = np.asarray(labels)[:n].astype(np.int64)
+    return out2[perm]  # back to original ids: part[old] = out2[perm[old]]
+
+
+def balance_and_refine(g: Graph,
+                       part: np.ndarray,
+                       l_max_vec: np.ndarray,
+                       parent: Optional[np.ndarray] = None,
+                       num_iterations: int = 2,
+                       num_chunks: int = 8,
+                       seed: int = 0) -> np.ndarray:
+    """Paper's BalanceAndRefine: restore feasibility, improve, re-restore."""
+    part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed)
+    part = lp_refine(g, part, l_max_vec, parent=parent,
+                     num_iterations=num_iterations,
+                     num_chunks=num_chunks, seed=seed)
+    part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed + 1)
+    return part

@@ -1,0 +1,5 @@
+from .format import Graph, from_coo, induced_subgraph, permute, to_ell
+from . import generators
+
+__all__ = ["Graph", "from_coo", "induced_subgraph", "permute", "to_ell",
+           "generators"]

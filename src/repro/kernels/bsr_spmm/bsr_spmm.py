@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: BSR (block-sparse row) SpMM —
+``Y = A @ X`` where A is a block-sparse adjacency matrix.
+
+This is the GNN aggregation primitive in its TPU-native form: instead of
+per-edge scatter (no TPU gather/scatter units), the adjacency is blocked
+into dense (BS x BS) tiles whose column indices are *scalar-prefetched*
+so the BlockSpec index_map can steer the X DMA per grid step (the
+standard Pallas block-sparse pattern). Dense tiles of a sparse matrix
+waste FLOPs on zeros but hit the MXU at full rate — the classic TPU
+trade (DESIGN.md §2, hardware adaptation).
+
+Layout (host-built, see ops.py):
+  vals      (NNZB, BS, BS) f32   dense nonzero blocks, row-major by block row
+  col_idx   (NNZB,)        i32   column block of each nonzero block
+  row_ptr   (RB + 1,)      i32   CSR-style pointers over block rows
+  X         (CB * BS, F)   f32   dense features
+  Y         (RB * BS, F)   f32
+
+Grid: (block_rows, num_nonzero_steps) — step j processes the j-th
+nonzero block of the current row (rows padded to equal nnz per row with
+zero blocks pointing at column 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(col_ref, vals_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = vals_ref[...]                      # (BS, BS)
+    x = x_ref[...]                         # (BS, F)
+    y_ref[...] += jax.lax.dot(a, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "nnz_per_row", "interpret"))
+def bsr_spmm(col_flat, vals, x, *, block_rows: int, nnz_per_row: int,
+             interpret: bool = True):
+    """col_flat: (block_rows * nnz_per_row,) i32 column-block ids (padded
+    entries point at block 0 with all-zero vals). vals: same order,
+    (block_rows * nnz_per_row, BS, BS). x: (CB*BS, F)."""
+    bs = vals.shape[1]
+    f = x.shape[1]
+    grid = (block_rows, nnz_per_row)
+
+    def vals_map(i, j, col_ref):
+        return (i * nnz_per_row + j, 0, 0)
+
+    def x_map(i, j, col_ref):
+        return (col_ref[i * nnz_per_row + j], 0)
+
+    def y_map(i, j, col_ref):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), vals_map),
+            pl.BlockSpec((bs, f), x_map),
+        ],
+        out_specs=pl.BlockSpec((bs, f), y_map),
+    )
+    kernel = lambda col_ref, vals_ref, x_ref, y_ref: _kernel(
+        col_ref, vals_ref.at[0], x_ref, y_ref)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((block_rows * bs, f), jnp.float32),
+        interpret=interpret,
+    )(col_flat, vals, x)

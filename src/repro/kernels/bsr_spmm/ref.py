@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for bsr_spmm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bsr_spmm_ref(col_flat, vals, x, *, block_rows: int, nnz_per_row: int):
+    bs = vals.shape[1]
+    f = x.shape[1]
+    xb = x.reshape(-1, bs, f)
+    gathered = xb[col_flat]                          # (RB*NNZ, BS, F)
+    prod = jnp.einsum("nij,njf->nif", vals, gathered)
+    prod = prod.reshape(block_rows, nnz_per_row, bs, f).sum(axis=1)
+    return prod.reshape(block_rows * bs, f)

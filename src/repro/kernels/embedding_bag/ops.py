@@ -1,0 +1,19 @@
+"""jit wrapper for the EmbeddingBag kernel (pads D to the lane width)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .embedding_bag import embedding_bag_1row
+
+
+def embedding_bag(idx: np.ndarray, table: np.ndarray,
+                  interpret: bool = True) -> np.ndarray:
+    """idx (B, BAG) int32, table (V, D) -> (B, D) sum-pooled."""
+    v, d = table.shape
+    d_pad = max(128, -(-d // 128) * 128)
+    tp = np.zeros((v, d_pad), dtype=np.float32)
+    tp[:, :d] = table
+    out = embedding_bag_1row(jnp.asarray(idx.astype(np.int32)),
+                             jnp.asarray(tp), interpret=interpret)
+    return np.asarray(out)[:, :d]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for embedding_bag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(idx, table):
+    return jnp.take(table, idx, axis=0).sum(axis=1)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: label-propagation gain over ELL rows.
+
+The partitioner's hot loop (paper §4) asks, per vertex v: among the
+labels of v's neighbors, which one has the largest total connection
+weight (subject to the target's weight budget), and what is the gain over
+v's current label?
+
+TPU adaptation (DESIGN.md §2): no hash tables — for a row of D padded
+neighbors we form the DxD label-equality matrix and contract it with the
+weight vector:   conn[j] = sum_i w[i] * [lab[i] == lab[j]]
+which is an f32 matmul per row tile -> MXU-shaped. Neighbor labels /
+target weights are pre-gathered outside (XLA gather is already optimal);
+the O(D^2) scoring is what the kernel owns.
+
+Inputs (padded: D multiple of 128, rows multiple of the tile):
+  lab       (N, D) i32   neighbor labels (sentinel = -1 on padding)
+  w         (N, D) f32   edge weights (0 on padding)
+  tgt_w     (N, D) f32   current weight of each neighbor's cluster
+  own_lab   (N, 1) i32   current label of the row vertex
+  vw        (N, 1) f32   row vertex weight
+  budget    scalar f32   max cluster weight W
+Outputs:
+  best_conn (N, 1) f32   best admissible connection weight (-1 if none)
+  target    (N, 1) i32   argmax label (-1 if none)
+  own_conn  (N, 1) f32   connection to the current label
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lab_ref, w_ref, tgt_w_ref, own_ref, vw_ref, budget_ref,
+            best_ref, target_ref, own_conn_ref):
+    lab = lab_ref[...]                       # (R, D) i32
+    w = w_ref[...]                           # (R, D) f32
+    tgt_w = tgt_w_ref[...]
+    own = own_ref[...]                       # (R, 1)
+    vw = vw_ref[...]                         # (R, 1)
+    budget = budget_ref[0, 0]
+
+    # connection weight of each neighbor's label: eq-matmul on the MXU
+    eq = (lab[:, :, None] == lab[:, None, :]).astype(jnp.float32)
+    conn = jax.lax.dot_general(
+        eq, w[:, :, None],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[:, :, 0]        # (R, D)
+
+    valid = lab >= 0
+    staying = lab == own
+    fits = (tgt_w + vw <= budget) & ~staying & valid
+    score = jnp.where(fits, conn, -1.0)
+    best = jnp.max(score, axis=1, keepdims=True)            # (R, 1)
+    # deterministic argmax -> smallest label among maximisers
+    is_best = (score == best) & fits
+    big = jnp.int32(2**30)
+    target = jnp.min(jnp.where(is_best, lab, big), axis=1, keepdims=True)
+    target = jnp.where(best >= 0, target, -1)
+    own_conn = jnp.sum(jnp.where(staying & valid, w, 0.0), axis=1,
+                       keepdims=True)
+    best_ref[...] = best
+    target_ref[...] = target
+    own_conn_ref[...] = own_conn
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def lp_gain_ell(lab, w, tgt_w, own_lab, vw, budget, *, row_tile: int = 256,
+                interpret: bool = True):
+    n, d = lab.shape
+    assert n % row_tile == 0, (n, row_tile)
+    grid = (n // row_tile,)
+    row_spec = lambda width, : pl.BlockSpec((row_tile, width),
+                                            lambda i: (i, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, 1), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(lab, w, tgt_w, own_lab, vw, budget)

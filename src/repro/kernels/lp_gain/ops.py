@@ -1,0 +1,56 @@
+"""jit wrapper: graph -> padded ELL -> lp_gain kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...graphs.format import Graph, to_ell
+from .lp_gain import lp_gain_ell
+
+
+def _pad_to(x, m, axis, fill):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - x.shape[axis])
+    return np.pad(x, pad, constant_values=fill)
+
+
+def prepare_ell(g: Graph, row_tile: int = 256, max_degree: int = 512
+                ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Graph -> padded (idx, w) ELL arrays: D multiple of 128, rows a
+    multiple of row_tile. Sentinel neighbor id = -1."""
+    idx, wgt, d = to_ell(g, max_degree=max_degree)
+    d_pad = max(128, -(-d // 128) * 128)
+    n_pad = -(-g.n // row_tile) * row_tile
+    idx = np.where(idx >= g.n, -1, idx)
+    idx = _pad_to(_pad_to(idx, d_pad, 1, -1), n_pad, 0, -1)
+    wgt = _pad_to(_pad_to(wgt, d_pad, 1, 0), n_pad, 0, 0)
+    return idx.astype(np.int32), wgt.astype(np.float32), d_pad
+
+
+def lp_gain(g: Graph, labels: np.ndarray, cluster_w: np.ndarray,
+            budget: float, row_tile: int = 256, interpret: bool = True):
+    """Compute (gain, target, own_conn) per vertex with the Pallas kernel.
+
+    labels/cluster_w indexed by vertex id / label id respectively."""
+    idx, wgt, _ = prepare_ell(g, row_tile)
+    n_pad = idx.shape[0]
+    lab_tab = np.concatenate([labels.astype(np.int32), [-1]])
+    cw_tab = np.concatenate([cluster_w.astype(np.float32), [np.inf]])
+    nbr_lab = np.where(idx >= 0, lab_tab[np.where(idx >= 0, idx, 0)], -1)
+    tgt_w = np.where(nbr_lab >= 0,
+                     cw_tab[np.where(nbr_lab >= 0, nbr_lab, 0)], np.inf)
+    own = np.full((n_pad, 1), -2, dtype=np.int32)
+    own[:g.n, 0] = labels
+    vw = np.zeros((n_pad, 1), dtype=np.float32)
+    vw[:g.n, 0] = g.vweights
+    best, target, own_conn = lp_gain_ell(
+        jnp.asarray(nbr_lab), jnp.asarray(wgt), jnp.asarray(tgt_w),
+        jnp.asarray(own), jnp.asarray(vw),
+        jnp.full((1, 1), budget, jnp.float32),
+        row_tile=row_tile, interpret=interpret)
+    gain = np.asarray(best)[:g.n, 0] - np.asarray(own_conn)[:g.n, 0]
+    return (gain, np.asarray(target)[:g.n, 0],
+            np.asarray(own_conn)[:g.n, 0])

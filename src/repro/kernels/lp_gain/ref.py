@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the lp_gain kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lp_gain_ell_ref(lab, w, tgt_w, own_lab, vw, budget):
+    eq = (lab[:, :, None] == lab[:, None, :])
+    conn = jnp.sum(jnp.where(eq, w[:, None, :], 0.0), axis=2)   # (N, D)
+    valid = lab >= 0
+    staying = lab == own_lab
+    fits = (tgt_w + vw <= budget[0, 0]) & ~staying & valid
+    score = jnp.where(fits, conn, -1.0)
+    best = jnp.max(score, axis=1, keepdims=True)
+    is_best = (score == best) & fits
+    big = jnp.int32(2**30)
+    target = jnp.min(jnp.where(is_best, lab, big), axis=1, keepdims=True)
+    target = jnp.where(best >= 0, target, -1)
+    own_conn = jnp.sum(jnp.where(staying & valid, w, 0.0), axis=1,
+                       keepdims=True)
+    return best, target, own_conn

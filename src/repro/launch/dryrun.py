@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import — jax locks
+# the device count at first init (see system design constraints).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell
+with ShapeDtypeStruct inputs (no allocation), print memory/cost analysis,
+and extract the collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import load_all
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[16,128]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in the compiled
+    (SPMD-partitioned) HLO. Result bytes are the wire-volume proxy:
+    all-gather receives its result, reduce-scatter/all-reduce move
+    ~operand bytes (== result for all-reduce)."""
+    stats = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find("= ")
+        if eq < 0:
+            continue
+        # match '<name> = TYPE op-name(...' — search the op marker AFTER
+        # '= ' (the variable name itself often contains the op name)
+        for op in COLLECTIVE_OPS:
+            pos = -1
+            for marker in (f" {op}(", f" {op}-start("):
+                pos = s.find(marker, eq)
+                if pos >= 0:
+                    break
+            if pos < 0:
+                continue
+            type_part = s[eq + 2: pos + 1]
+            b = _shape_bytes(type_part)
+            ent = stats.setdefault(op, {"count": 0, "bytes": 0})
+            ent["count"] += 1
+            ent["bytes"] += b
+            break
+    return stats
+
+
+def _probe_flops(entry, shape_name: str, mesh, n_layers: int) -> float:
+    """Per-device HLO flops of an unrolled n_layers variant (LM cells:
+    lax.scan hides the per-layer cost from cost_analysis, so the real
+    total is reconstructed as f1 + (L-1)*(f2-f1))."""
+    import dataclasses as dc
+    e = dc.replace(entry, config=dc.replace(
+        entry.config, n_layers=n_layers, scan_layers=False))
+    built = build_step(e, shape_name, mesh)
+    compiled = jax.jit(built.fn, in_shardings=built.in_shardings) \
+        .lower(*built.args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
+def run_cell(entry, shape_name: str, multi_pod: bool, verbose: bool = True,
+             probe: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    built = build_step(entry, shape_name, mesh)
+    t0 = time.time()
+    jitted = jax.jit(built.fn, in_shardings=built.in_shardings)
+    lowered = jitted.lower(*built.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_size_bytes": int(getattr(ma, "argument_size_in_bytes",
+                                               0)),
+            "output_size_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_size_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_size_bytes":
+                int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed")}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    txt = compiled.as_text()
+    coll = collective_stats(txt)
+
+    flops_corrected = None
+    # probes (scan-corrected flops) only on the single-pod mesh — the
+    # §Roofline table is single-pod; the multi-pod pass proves sharding
+    if probe and not multi_pod and entry.kind == "lm" and "flops" in cost:
+        try:
+            t0 = time.time()
+            f1 = _probe_flops(entry, shape_name, mesh, 1)
+            f2 = _probe_flops(entry, shape_name, mesh, 2)
+            L = entry.config.n_layers
+            flops_corrected = f1 + (L - 1) * (f2 - f1)
+            cost["probe_s"] = round(time.time() - t0, 2)
+            cost["flops_l1_probe"] = f1
+            cost["flops_l2_probe"] = f2
+        except Exception as e:  # pragma: no cover
+            cost["probe_error"] = repr(e)
+
+    result = {
+        "arch": entry.arch_id,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "collectives": coll,
+        "model_flops": built.model_flops,
+        "hlo_flops_per_device": cost.get("flops"),
+        "hlo_flops_per_device_corrected": flops_corrected,
+        "optimizer": built.opt_name,
+    }
+    if verbose:
+        print(json.dumps(result), flush=True)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="artifact dir for JSONs")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    registry = load_all()
+    cells = []
+    if args.all:
+        for entry in registry.values():
+            for s in entry.shapes:
+                cells.append((entry, s.name))
+    else:
+        entry = registry[args.arch]
+        names = [args.shape] if args.shape else [s.name
+                                                 for s in entry.shapes]
+        cells = [(entry, n) for n in names]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for entry, shape_name in cells:
+        for mp in meshes:
+            tag = f"{entry.arch_id}/{shape_name}/" + \
+                ("pod2x16x16" if mp else "pod16x16")
+            fn = tag.replace("/", "__") + ".json"
+            if args.skip_existing and args.out and \
+                    os.path.exists(os.path.join(args.out, fn)):
+                continue
+            try:
+                res = run_cell(entry, shape_name, mp)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(res, f, indent=1)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(json.dumps({"cell": tag, "error": repr(e)}),
+                      flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"FAILED {len(failures)} cells", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16x16 = 256 chips ('data', 'model'); multi-pod adds a
+    leading 'pod' axis (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(p: int):
+    """1D 'pe' mesh over p local (or forced-host) devices — used by the
+    distributed partitioner and its tests."""
+    return jax.make_mesh((p,), ("pe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

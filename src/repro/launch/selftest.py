@@ -1,0 +1,129 @@
+"""Multi-device selftest — run in a subprocess with a forced device count.
+
+Usage:  python -m repro.launch.selftest --devices 8 --test all
+
+Sets XLA_FLAGS *before* importing jax (device count locks at first init),
+then validates the distributed implementation against the single-process
+reference: collectives round-trip, distributed clustering validity,
+distributed partition feasibility + quality, grid vs direct all-to-all
+equivalence. Prints one JSON line per test; exit code 0 iff all pass.
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--test", default="all",
+                    choices=["all", "collectives", "halo", "cluster",
+                             "partition", "refine"])
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--family", default="rgg2d")
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.core import PartitionerConfig, metrics, partition
+    from repro.dist.collectives import direct_all_to_all, grid_all_to_all
+    from repro.dist.dist_lp import dist_cluster, make_mesh_1d
+    from repro.dist.dist_partitioner import (dist_partition,
+                                             dist_refine_and_balance)
+    from repro.graphs import generators
+    from repro.graphs.distribute import distribute_graph
+
+    P = args.devices
+    assert len(jax.devices()) >= P, jax.devices()
+    ok = True
+
+    def report(name, passed, **kw):
+        nonlocal ok
+        ok &= bool(passed)
+        print(json.dumps({"test": name, "pass": bool(passed), **kw}),
+              flush=True)
+
+    cfg = PartitionerConfig(contraction_limit=128, ip_repetitions=2,
+                            num_chunks=4)
+    g = generators.make(args.family, args.n, 8.0, seed=5)
+
+    if args.test in ("all", "collectives"):
+        mesh = make_mesh_1d(P)
+        rng = np.random.default_rng(0)
+        slab = rng.integers(0, 1000, size=(P, P, 3)).astype(np.int32)
+
+        def run(fn):
+            f = jax.shard_map(lambda s: fn(s[0])[None], mesh=mesh,
+                              in_specs=PS("pe"), out_specs=PS("pe"))
+            return np.asarray(jax.jit(f)(jnp.asarray(slab)))
+
+        out_direct = run(lambda s: direct_all_to_all(s, "pe"))
+        out_grid = run(lambda s: grid_all_to_all(s, "pe", P))
+        # ground truth: out[p, q] == in[q, p]
+        want = np.swapaxes(slab, 0, 1)
+        report("collectives.direct", np.array_equal(out_direct, want))
+        report("collectives.grid", np.array_equal(out_grid, want))
+
+    if args.test in ("all", "cluster"):
+        from repro.core.coarsening import enforce_cluster_weights
+        shards = distribute_graph(g, P)
+        W = max(1, int(0.03 * g.total_vweight / args.k))
+        labels = dist_cluster(shards, W, num_iterations=3, num_chunks=4,
+                              seed=1, use_grid=True)
+        raw = labels.copy()
+        # driver behaviour: distributed revert is approximate (paper §4 —
+        # races bounce weight back); exact enforcement happens before
+        # contraction
+        labels = enforce_cluster_weights(labels, np.asarray(g.vweights), W)
+        cw = np.zeros(g.n + 1, dtype=np.int64)
+        np.add.at(cw, labels, g.vweights)
+        members = np.bincount(labels, minlength=g.n + 1)
+        shrunk = np.unique(labels).size < 0.7 * g.n
+        multi_ok = np.all(cw[members > 1] <= W)
+        report("cluster.dist", shrunk and multi_ok,
+               clusters=int(np.unique(labels).size), n=g.n, W=W,
+               max_multi_cw=int(cw[members > 1].max() if
+                                (members > 1).any() else 0))
+        labels2 = dist_cluster(shards, W, num_iterations=3, num_chunks=4,
+                               seed=1, use_grid=False)
+        report("cluster.grid_vs_direct",
+               np.array_equal(raw, labels2))
+
+    if args.test in ("all", "refine"):
+        rng = np.random.default_rng(2)
+        part0 = rng.integers(0, args.k, size=g.n)
+        lmax = np.full(args.k, metrics.l_max(
+            g.total_vweight, args.k, 0.03, int(g.vweights.max())),
+            dtype=np.int64)
+        cut0 = metrics.edge_cut(g, part0)
+        part1 = dist_refine_and_balance(g, part0, lmax, P, num_iterations=3,
+                                        num_chunks=4, seed=3)
+        cut1 = metrics.edge_cut(g, part1)
+        feas = metrics.is_feasible(g, part1, args.k, 0.03)
+        report("refine.dist", feas and cut1 < cut0, cut_before=cut0,
+               cut_after=cut1, feasible=feas)
+
+    if args.test in ("all", "partition"):
+        part = dist_partition(g, args.k, P, cfg=cfg)
+        s = metrics.summarize(g, part, args.k, 0.03)
+        ref = partition(g, args.k, config=cfg)
+        cut_ref = metrics.edge_cut(g, ref)
+        # distributed quality within 1.5x of the single-process reference
+        report("partition.dist", s["feasible"] and
+               s["cut"] <= max(1.5 * cut_ref, cut_ref + 50),
+               dist=s, ref_cut=cut_ref)
+
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""Model substrate: parameter specs with logical sharding axes, init,
+and the tiny set of NN ops everything reuses (pure JAX, no flax).
+
+Every parameter is declared as a ``ParamSpec`` carrying its *logical*
+axes ('embed', 'mlp', 'heads', 'vocab', 'expert', ...). The launch layer
+maps logical axes -> mesh axes through per-config rules
+(dist/sharding.py), falling back to replication when a dim is not
+divisible by the mesh axis — the planner never produces an invalid
+sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+SpecTree = Any     # nested dict of ParamSpec
+ParamTree = Any    # nested dict of jnp.ndarray
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs: SpecTree):
+    return jax.tree_util.tree_map(fn, specs,
+                                  is_leaf=is_spec)
+
+
+def init_params(specs: SpecTree, key: jax.Array) -> ParamTree:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else \
+            max(1, int(np.prod(spec.shape)))
+        if spec.init == "embed":
+            std = spec.scale
+        else:
+            std = spec.scale / math.sqrt(fan_in)
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs: SpecTree):
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def param_count(specs: SpecTree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma + beta).astype(x.dtype)
+
+
+_ACT = {
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "ssp": lambda x: jax.nn.softplus(x) - math.log(2.0),   # shifted softplus
+    "tanh": jnp.tanh,
+}
+
+
+def act_fn(name: str):
+    return _ACT[name]
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, half)
+    ang = ang[..., None, :]                                   # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, mask=None, z_loss: float = 0.0):
+    """Stable CE in fp32; optional z-loss (log-sum-exp regularizer)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

@@ -1,0 +1,144 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — RM2-class config.
+
+13 dense features -> bottom MLP 13-512-256-64; 26 sparse features ->
+EmbeddingBag lookups (sum-pooled multi-hot); dot-product feature
+interaction; top MLP 512-512-256-1.
+
+JAX has no native EmbeddingBag — it is built here from ``jnp.take`` +
+``jax.ops.segment_sum`` (the system requirement, see kernel taxonomy
+§RecSys). The embedding tables are the hot path and are sharded over the
+'model' axis by the placement engine (placement/dlrm_placement.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import NULL_CTX, ShardCtx
+from .common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_per_table: int = 1_000_000
+    bag_size: int = 1                   # multi-hot indices per feature
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def build_specs(cfg: DLRMConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        # one stacked tensor for all tables: (n_tables, vocab, dim)
+        "tables": ParamSpec((cfg.n_sparse, cfg.vocab_per_table,
+                             cfg.embed_dim),
+                            ("expert", "table", "table_dim"),
+                            init="embed", scale=0.01, dtype=cfg.param_dtype),
+    }
+    dims = [cfg.n_dense] + list(cfg.bot_mlp)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs[f"bot_w{i}"] = ParamSpec((a, b), (None, "mlp"),
+                                       dtype=cfg.param_dtype)
+        specs[f"bot_b{i}"] = ParamSpec((b,), ("mlp",), init="zeros",
+                                       dtype=cfg.param_dtype)
+    d_top_in = cfg.n_interact + cfg.bot_mlp[-1]
+    dims = [d_top_in] + list(cfg.top_mlp)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs[f"top_w{i}"] = ParamSpec((a, b), (None, "mlp"),
+                                       dtype=cfg.param_dtype)
+        specs[f"top_b{i}"] = ParamSpec((b,), ("mlp",), init="zeros",
+                                       dtype=cfg.param_dtype)
+    return specs
+
+
+def embedding_bag(table, idx, weights=None, mode: str = "sum"):
+    """table: (V, D); idx: (B, bag); -> (B, D). Sum/mean pooling via
+    take + reduce (segment_sum over the bag dim is a reshape-reduce here
+    because bags are fixed-size)."""
+    rows = jnp.take(table, idx, axis=0)           # (B, bag, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        out = out / idx.shape[1]
+    return out
+
+
+def _mlp(params, prefix, n, x, final_act=None):
+    for i in range(n):
+        x = x @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def forward(params, batch, cfg: DLRMConfig, ctx: ShardCtx = NULL_CTX):
+    """batch: dense (B, 13) float, sparse (B, 26, bag) int32.
+    Returns logits (B,)."""
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    cd = cfg.compute_dtype
+    bot = _mlp(params, "bot", len(cfg.bot_mlp), dense.astype(cd),
+               final_act=jax.nn.relu)                       # (B, 64)
+    bot = ctx.constrain(bot, "batch", None)
+
+    # EmbeddingBag over all 26 tables (vmap over the table axis)
+    def one_table(tab, ix):
+        return embedding_bag(tab.astype(cd), ix)
+    emb = jax.vmap(one_table, in_axes=(0, 1), out_axes=1)(
+        params["tables"], sparse)                            # (B, 26, D)
+    emb = ctx.constrain(emb, "batch", None, None)
+
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, 27, D)
+    inter = jnp.einsum("bnd,bmd->bnm", feats, feats)         # (B, 27, 27)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                  # (B, 351)
+    top_in = jnp.concatenate([flat, bot], axis=-1)
+    logits = _mlp(params, "top", len(cfg.top_mlp), top_in)   # (B, 1)
+    return logits[:, 0]
+
+
+def loss_fn(params, batch, cfg: DLRMConfig, ctx: ShardCtx = NULL_CTX):
+    logits = forward(params, batch, cfg, ctx)
+    y = batch["labels"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # stable BCE-with-logits
+    loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.mean(loss)
+
+
+def retrieval_score(params, batch, cfg: DLRMConfig,
+                    ctx: ShardCtx = NULL_CTX, top_k: int = 100):
+    """Retrieval-scoring path: one query (dense + sparse profile) against
+    ``n_candidates`` precomputed candidate vectors — a single batched dot
+    + top-k, never a loop."""
+    dense, sparse = batch["dense"], batch["sparse"]          # (1, ...)
+    cand = batch["candidates"]                               # (Nc, D)
+    cd = cfg.compute_dtype
+    bot = _mlp(params, "bot", len(cfg.bot_mlp), dense.astype(cd),
+               final_act=jax.nn.relu)
+
+    def one_table(tab, ix):
+        return embedding_bag(tab.astype(cd), ix)
+    emb = jax.vmap(one_table, in_axes=(0, 1), out_axes=1)(
+        params["tables"], sparse)
+    user = bot + emb.sum(axis=1)                             # (1, D)
+    scores = (cand.astype(cd) @ user[0]).astype(jnp.float32)  # (Nc,)
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, idx

@@ -1,0 +1,115 @@
+"""GNN substrate: padded graph batches + segment-op message passing.
+
+JAX sparse is BCOO-only, so message passing is implemented directly over
+edge-index arrays with ``jax.ops.segment_sum`` / ``segment_max`` (this IS
+the system — see kernel taxonomy §GNN). Padded edges use ``n_node`` as the
+sentinel so gathers stay in-bounds and scatters land in a junk slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...graphs.format import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Static-shape batch. senders/receivers padded with n_node."""
+    senders: jnp.ndarray        # (E,) int32
+    receivers: jnp.ndarray      # (E,) int32
+    n_node: int                 # static (includes one sentinel slot at n)
+    node_feat: Optional[jnp.ndarray] = None   # (N, F)
+    species: Optional[jnp.ndarray] = None     # (N,) int32 atomic numbers
+    positions: Optional[jnp.ndarray] = None   # (N, 3)
+    graph_id: Optional[jnp.ndarray] = None    # (N,) int32 for batched graphs
+    n_graphs: int = 1
+    labels: Optional[jnp.ndarray] = None
+    node_mask: Optional[jnp.ndarray] = None   # (N,) bool
+    # dimenet triplets: edge ids (kj, ji) with shared middle vertex j
+    trip_kj: Optional[jnp.ndarray] = None     # (T,) int32 (sentinel E)
+    trip_ji: Optional[jnp.ndarray] = None     # (T,) int32
+
+
+def from_graph(g: Graph, feat=None, labels=None, seed: int = 0,
+               with_positions: bool = False, pad_edges: int = 0
+               ) -> GraphBatch:
+    rng = np.random.default_rng(seed)
+    src = g.arc_tails().astype(np.int32)
+    dst = np.asarray(g.adjncy, dtype=np.int32)
+    E = g.m + pad_edges
+    senders = np.full(E, g.n, dtype=np.int32)
+    receivers = np.full(E, g.n, dtype=np.int32)
+    senders[:g.m] = src
+    receivers[:g.m] = dst
+    pos = rng.standard_normal((g.n + 1, 3)).astype(np.float32) * 2.0 \
+        if with_positions else None
+    return GraphBatch(
+        senders=jnp.asarray(senders), receivers=jnp.asarray(receivers),
+        n_node=g.n + 1,
+        node_feat=jnp.asarray(feat) if feat is not None else None,
+        positions=jnp.asarray(pos) if pos is not None else None,
+        species=None, labels=jnp.asarray(labels)
+        if labels is not None else None)
+
+
+def scatter_sum(values, index, num_segments):
+    return jax.ops.segment_sum(values, index, num_segments=num_segments)
+
+
+def edge_softmax(scores, receivers, n_node):
+    """Per-destination softmax over incoming edges. scores: (E, ...)"""
+    smax = jax.ops.segment_max(scores, receivers, num_segments=n_node)
+    ex = jnp.exp(scores - smax[receivers])
+    denom = jax.ops.segment_sum(ex, receivers, num_segments=n_node)
+    return ex / jnp.maximum(denom[receivers], 1e-9)
+
+
+def edge_vectors(batch: GraphBatch):
+    """r_ij = pos[receiver] - pos[sender]; sentinel edges get unit z."""
+    rij = batch.positions[batch.receivers] - batch.positions[batch.senders]
+    pad = batch.senders >= batch.n_node - 1
+    rij = jnp.where(pad[:, None], jnp.array([0.0, 0.0, 1.0]), rij)
+    d = jnp.linalg.norm(rij, axis=-1)
+    d = jnp.maximum(d, 1e-6)
+    return rij, d, ~pad
+
+
+def gaussian_rbf(d, n_rbf: int, cutoff: float):
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 1.0 / ((mu[1] - mu[0]) ** 2 + 1e-9)
+    return jnp.exp(-gamma * jnp.square(d[:, None] - mu[None, :]))
+
+
+def bessel_rbf(d, n_rbf: int, cutoff: float):
+    """DimeNet/NequIP radial basis: sqrt(2/c) sin(n pi d / c) / d."""
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    return (jnp.sqrt(2.0 / cutoff) * jnp.sin(n[None, :] * jnp.pi
+            * d[:, None] / cutoff) / d[:, None])
+
+
+def cosine_cutoff(d, cutoff: float):
+    c = 0.5 * (jnp.cos(jnp.pi * jnp.minimum(d, cutoff) / cutoff) + 1.0)
+    return jnp.where(d <= cutoff, c, 0.0)
+
+
+def mlp_specs(name_sizes, prefix: str, axes_hidden: str = "feat"):
+    """Helper: dense-stack MLP ParamSpecs {prefix}_w{i}/{prefix}_b{i}."""
+    from ..common import ParamSpec
+    out = {}
+    for i, (din, dout) in enumerate(name_sizes):
+        out[f"{prefix}_w{i}"] = ParamSpec((din, dout), (None, None))
+        out[f"{prefix}_b{i}"] = ParamSpec((dout,), (None,), init="zeros")
+    return out
+
+
+def mlp_apply(params, prefix, x, act, n_layers, final_act: bool = False):
+    for i in range(n_layers):
+        x = x @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = act(x)
+    return x

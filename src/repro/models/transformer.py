@@ -1,0 +1,471 @@
+"""Decoder-only transformer LM: dense + MoE, GQA/MQA, RoPE, GLU FFNs.
+
+One definition serves all five assigned LM architectures. Layers are
+stacked (leading 'stack' axis) and applied with lax.scan + optional remat
+so 35-layer/480B configs lower to a single compiled layer body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import NULL_CTX, ShardCtx
+from .common import (ParamSpec, act_fn, cross_entropy_loss, rms_norm, rope)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    glu: bool = True                  # gated FFN (SwiGLU/GeGLU)
+    activation: str = "silu"          # silu -> SwiGLU, gelu_tanh -> GeGLU
+    qkv_bias: bool = False            # qwen2
+    tied_embeddings: bool = False     # gemma
+    rope_theta: float = 10000.0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False  # arctic: dense FFN + MoE in parallel
+    moe_d_ff: int = 0                 # per-expert hidden (defaults to d_ff)
+    # numerics / memory
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True          # False: unrolled (accurate HLO cost)
+    logit_softcap: float = 0.0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def vocab_pad(self) -> int:
+        """Vocab rounded to a multiple of 256 so the vocab dim always
+        shards over the model axis (unsharded fp32 logits were the top
+        memory consumer on odd-vocab configs — EXPERIMENTS.md §Perf).
+        Padded logit columns are masked with -inf in forward/decode."""
+        return -(-self.vocab // 256) * 256
+
+
+def build_specs(cfg: TransformerConfig) -> Dict[str, Any]:
+    L, d, pd = cfg.n_layers, cfg.d_model, cfg.param_dtype
+    ffn_mult = 2 if cfg.glu else 1
+
+    def P(shape, axes, **kw):
+        return ParamSpec(tuple(shape), tuple(axes), dtype=pd, **kw)
+
+    layer: Dict[str, Any] = {
+        "ln_attn": P((L, d), ("stack", "embed"), init="zeros"),
+        "ln_ffn": P((L, d), ("stack", "embed"), init="zeros"),
+        "wq": P((L, d, cfg.n_heads, cfg.head_dim),
+                ("stack", "embed", "heads", "head_dim")),
+        "wk": P((L, d, cfg.n_kv_heads, cfg.head_dim),
+                ("stack", "embed", "kv_heads", "head_dim")),
+        "wv": P((L, d, cfg.n_kv_heads, cfg.head_dim),
+                ("stack", "embed", "kv_heads", "head_dim")),
+        "wo": P((L, cfg.n_heads, cfg.head_dim, d),
+                ("stack", "heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = P((L, cfg.n_heads, cfg.head_dim),
+                        ("stack", "heads", "head_dim"), init="zeros")
+        layer["bk"] = P((L, cfg.n_kv_heads, cfg.head_dim),
+                        ("stack", "kv_heads", "head_dim"), init="zeros")
+        layer["bv"] = P((L, cfg.n_kv_heads, cfg.head_dim),
+                        ("stack", "kv_heads", "head_dim"), init="zeros")
+    dense_ffn = cfg.moe_dense_residual or not cfg.moe
+    if dense_ffn:
+        layer["w_in"] = P((L, d, ffn_mult, cfg.d_ff),
+                          ("stack", "embed", None, "mlp"))
+        layer["w_out"] = P((L, cfg.d_ff, d), ("stack", "mlp", "embed"))
+    if cfg.moe:
+        E, f = cfg.n_experts, cfg.expert_ff
+        layer["router"] = P((L, d, E), ("stack", "embed", "expert"))
+        layer["e_in"] = P((L, E, d, ffn_mult, f),
+                          ("stack", "expert", "embed", None, "mlp"))
+        layer["e_out"] = P((L, E, f, d), ("stack", "expert", "mlp", "embed"))
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_pad, d), ("vocab", "embed"),
+                           init="embed", scale=0.02, dtype=pd),
+        "ln_f": P((d,), ("embed",), init="zeros"),
+        "layers": layer,
+    }
+    if not cfg.tied_embeddings:
+        specs["head"] = P((d, cfg.vocab_pad), ("embed", "vocab"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# MoE layer (sort-based dispatch, static capacity)
+# ---------------------------------------------------------------------------
+
+def moe_ffn(lp, x, cfg: TransformerConfig, ctx: ShardCtx):
+    """x: (T, d) -> (T, d), plus load-balancing aux loss.
+
+    Group-local dispatch (GShard-style): tokens are blocked into G groups
+    matching the data sharding, the expert sort/scatter happens *within*
+    each group (vmapped — no cross-shard traffic), and the only
+    communication is the (G, E, ...) <-> (E, G, ...) reshard around the
+    expert einsum, which GSPMD lowers to the expert-parallel all_to_all.
+    A naive global argsort instead makes XLA all-gather every token
+    (measured: 242 GB/device of all-reduce on granite-1b — see
+    EXPERIMENTS.md §Perf)."""
+    T, d = x.shape
+    E, k, f = cfg.n_experts, cfg.top_k, cfg.expert_ff
+    G = ctx.data_groups()
+    while T % G:
+        G //= 2
+    Tg = T // G
+    cap = max(1, int(math.ceil(Tg * k * cfg.capacity_factor / E)))
+    logits = (x.astype(jnp.float32) @ lp["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    topw, topi = jax.lax.top_k(gates, k)                     # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # aux loss (Switch): E * <fraction routed to e> . <mean gate e>
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    xg = ctx.constrain(x.reshape(G, Tg, d), "batch", None, "embed")
+    eid = topi.reshape(G, Tg * k)                            # (G, Tg*k)
+    wsg = topw.reshape(G, Tg * k)
+    tokid = jnp.arange(Tg * k, dtype=jnp.int32) // k         # (Tg*k,)
+
+    # All heavy data movement below is expressed as row *gathers*; the
+    # only scatters carry scalar int32 slot ids. (Scattering the (cap, d)
+    # payload directly materializes full-shape u32 index temps in XLA —
+    # 4x 4.7 GB/device on arctic-480b; EXPERIMENTS.md §Perf.)
+    def group_plan(eid_g):
+        order = jnp.argsort(eid_g, stable=True)
+        s_eid = eid_g[order]
+        start = jnp.searchsorted(s_eid, s_eid, side="left")
+        rank = jnp.arange(Tg * k, dtype=jnp.int32) - start
+        keep = rank < cap
+        slot = jnp.where(keep, s_eid * cap + rank, E * cap)  # (Tg*k,)
+        # slot -> source token (scalar scatter), sentinel row E*cap
+        src_tok = jnp.full((E * cap + 1,), Tg, jnp.int32) \
+            .at[slot].set(tokid[order], mode="drop")[:E * cap]
+        # expanded position -> its slot (for the gather-based combine)
+        slot_of = jnp.zeros((Tg * k,), jnp.int32) \
+            .at[order].set(slot)                             # (Tg*k,)
+        return src_tok, slot_of
+
+    src_tok, slot_of = jax.vmap(group_plan)(eid)             # (G, E*cap) ...
+
+    def group_gather(xg_g, src_tok_g):
+        xp = jnp.concatenate([xg_g, jnp.zeros((1, d), xg_g.dtype)])
+        return xp[src_tok_g].reshape(E, cap, d)
+
+    buf = jax.vmap(group_gather)(xg, src_tok)                # (G, E, cap, d)
+    buf = jnp.swapaxes(buf, 0, 1)                            # (E, G, cap, d)
+    buf = ctx.constrain(buf, "expert", "batch", None, "embed")
+
+    w_in = lp["e_in"].astype(cfg.compute_dtype)              # (E, d, g, f)
+    w_out = lp["e_out"].astype(cfg.compute_dtype)            # (E, f, d)
+    h = jnp.einsum("egcd,edif->egcif", buf, w_in)
+    if cfg.glu:
+        h = act_fn(cfg.activation)(h[..., 0, :]) * h[..., 1, :]
+    else:
+        h = act_fn(cfg.activation)(h[..., 0, :])
+    out_buf = jnp.einsum("egcf,efd->egcd", h, w_out)         # (E, G, cap, d)
+    out_buf = ctx.constrain(out_buf, "expert", "batch", None, "embed")
+    out_buf = jnp.swapaxes(out_buf, 0, 1)                    # (G, E, cap, d)
+    out_buf = ctx.constrain(out_buf, "batch", "expert", None, "embed")
+
+    def group_combine(ob_g, slot_of_g, ws_g):
+        flat = jnp.concatenate([ob_g.reshape(E * cap, d),
+                                jnp.zeros((1, d), ob_g.dtype)])
+        rows = flat[slot_of_g]                               # (Tg*k, d)
+        rows = rows * ws_g.astype(rows.dtype)[:, None]
+        return rows.reshape(Tg, k, d).sum(axis=1)
+
+    y = jax.vmap(group_combine)(out_buf, slot_of, wsg)       # (G, Tg, d)
+    y = ctx.constrain(y, "batch", None, "embed")
+    return y.reshape(T, d), aux
+
+
+def dense_ffn(lp, x, cfg: TransformerConfig):
+    w_in = lp["w_in"].astype(cfg.compute_dtype)              # (d, g, f)
+    w_out = lp["w_out"].astype(cfg.compute_dtype)            # (f, d)
+    h = jnp.einsum("td,dgf->tgf", x, w_in)
+    if cfg.glu:
+        h = act_fn(cfg.activation)(h[:, 0]) * h[:, 1]
+    else:
+        h = act_fn(cfg.activation)(h[:, 0])
+    return h @ w_out
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(lp, x, positions, cfg: TransformerConfig, ctx: ShardCtx,
+              kv_cache: Optional[Tuple] = None,
+              cache_len: Optional[jnp.ndarray] = None):
+    """x: (B, S, d). With kv_cache=(k,v) of (B, S_ctx, Hkv, hd) performs
+    decode (queries attend to cache + self)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhq->bshq", x, lp["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhq->bshq", x, lp["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhq->bshq", x, lp["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(cd)
+        k = k + lp["bk"].astype(cd)
+        v = v + lp["bv"].astype(cd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = ctx.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+
+    new_kv = (k, v)
+    rep = H // Hkv
+    if kv_cache is None:
+        out = _blockwise_self_attention(q, k, v, positions, cfg, ctx)
+    else:
+        ck, cv = kv_cache                                    # (B, Sc, Hkv, hd)
+        k = jnp.concatenate([ck.astype(cd), k], axis=1)
+        v = jnp.concatenate([cv.astype(cd), v], axis=1)
+        S_kv = k.shape[1]
+        qg = q.reshape(B, S, Hkv, rep, hd)
+        scores = jnp.einsum("bshrd,bthd->bhrst", qg, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores / math.sqrt(hd)
+        # cache slots 0..cache_len-1 are valid history; the S fresh slots
+        # (appended at the end) are causal among themselves
+        S_c = S_kv - S
+        valid_cache = jnp.broadcast_to(
+            jnp.arange(S_c)[None, None, :] < cache_len[:, None, None],
+            (B, S, S_c))
+        valid_new = jnp.broadcast_to(
+            jnp.arange(S)[None, None, :] <= jnp.arange(S)[None, :, None],
+            (B, S, S))
+        mask = jnp.concatenate([valid_cache, valid_new], axis=2)
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+        out = jnp.einsum("bhrst,bthd->bshrd", probs, v)
+        out = out.reshape(B, S, H, hd)
+    y = jnp.einsum("bshq,hqd->bsd", out, lp["wo"].astype(cd))
+    return y, new_kv
+
+
+def _blockwise_self_attention(q, k, v, positions, cfg: TransformerConfig,
+                              ctx: ShardCtx, kv_block: int = 1024):
+    """Causal self-attention with a running-softmax scan over KV blocks
+    (flash semantics in pure JAX): the (S, S) score matrix is never
+    materialized — per step only (B, Sq, Hkv, rep, blk). The query seq
+    dim is sequence-parallel over the model axis ('act_seq'); K/V blocks
+    are gathered (Hkv*hd wide — small)."""
+    B, S, Hkv, hd = k.shape
+    H = q.shape[2]
+    rep = H // Hkv
+    cd = q.dtype
+    blk = min(kv_block, S)
+    while S % blk:
+        blk //= 2
+    nb = S // blk
+    qg = q.reshape(B, S, Hkv, rep, hd)
+    qg = ctx.constrain(qg, "batch", "act_seq", "kv_heads", None, None)
+    scale = 1.0 / math.sqrt(hd)
+    kb = k.reshape(B, nb, blk, Hkv, hd).swapaxes(0, 1)     # (nb,B,blk,Hkv,hd)
+    vb = v.reshape(B, nb, blk, Hkv, hd).swapaxes(0, 1)
+    posb = positions.reshape(B, nb, blk).swapaxes(0, 1)    # (nb, B, blk)
+    q_pos = positions                                       # (B, S)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kk, vv, pp = xs
+        s = jnp.einsum("bshrd,bkhd->bshrk", qg, kk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = q_pos[:, :, None] >= pp[:, None, :]          # (B, S, blk)
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + jnp.sum(p, axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "bshrk,bkhd->bshrd", p.astype(cd), vv,
+            preferred_element_type=jnp.float32)
+        return (m2, l2, acc2), ()
+
+    m0 = jnp.full((B, S, Hkv, rep), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, rep), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, rep, hd), jnp.float32)
+    # remat the per-block body: otherwise the bwd pass saves the f32
+    # scores/probs for EVERY kv block (measured 12+ GB/device on
+    # stablelm-12b train_4k — EXPERIMENTS.md §Perf)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (kb, vb, posb))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(cd)
+    out = out.reshape(B, S, H, hd)
+    return ctx.constrain(out, "batch", "act_seq", None, None)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _vocab_pad_bias(cfg: TransformerConfig, dtype):
+    if cfg.vocab_pad == cfg.vocab:
+        return jnp.zeros((cfg.vocab_pad,), dtype)
+    return jnp.where(jnp.arange(cfg.vocab_pad) < cfg.vocab, 0.0,
+                     -1e30).astype(dtype)
+
+
+def _layer_fn(lp, x, positions, cfg, ctx):
+    B, S, d = x.shape
+    h, _ = attention(lp, rms_norm(x, lp["ln_attn"]), positions, cfg, ctx)
+    x = x + h
+    # sequence-parallel residual: the scan-carried activation is sharded
+    # over (batch -> data, seq -> model) so remat residuals fit HBM
+    x = ctx.constrain(x, "batch", "act_seq", "embed")
+    hin = rms_norm(x, lp["ln_ffn"]).reshape(B * S, d)
+    aux = jnp.zeros((), jnp.float32)
+    out = jnp.zeros_like(hin)
+    if cfg.moe:
+        mo, aux = moe_ffn(lp, hin, cfg, ctx)
+        out = out + mo
+    if cfg.moe_dense_residual or not cfg.moe:
+        out = out + dense_ffn(lp, hin, cfg)
+    x = x + out.reshape(B, S, d)
+    x = ctx.constrain(x, "batch", "act_seq", "embed")
+    return x, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig,
+            ctx: ShardCtx = NULL_CTX, positions=None):
+    """tokens: (B, S) -> logits (B, S, V); returns (logits, aux_loss)."""
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens] * math.sqrt(cfg.d_model)
+    x = ctx.constrain(x, "batch", "act_seq", "embed")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    layer_fn = _layer_fn
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            _layer_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(3, 4))
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            x, aux = carry
+            x, a = layer_fn(lp, x, positions, cfg, ctx)
+            return (x, aux + a), ()
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[li], params["layers"])
+            x, a = layer_fn(lp, x, positions, cfg, ctx)
+            aux = aux + a
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tied_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cd))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = logits + _vocab_pad_bias(cfg, logits.dtype)
+    logits = ctx.constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, ctx: ShardCtx = NULL_CTX):
+    logits, aux = forward(params, batch["tokens"], cfg, ctx)
+    loss = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:],
+                              mask=batch.get("mask", None))
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving (KV-cache decode)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int,
+                long_context: bool = False):
+    """KV cache as ParamSpecs so the launch layer can shard it. For
+    long-context serving the sequence dim is sharded over the mesh."""
+    seq_ax = "kv_seq" if long_context else "seq"
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("stack", "batch", seq_ax, "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec(shape, axes, init="zeros", dtype=cfg.compute_dtype),
+        "v": ParamSpec(shape, axes, init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: TransformerConfig,
+                ctx: ShardCtx = NULL_CTX):
+    """One decode step. tokens: (B,) int32; cache_len: (B,) current length.
+    Returns (logits (B, V), new_cache). The new token's K/V is written at
+    position cache_len (static-shape dynamic_update via one-hot scatter so
+    the op shards cleanly over a sequence-sharded cache)."""
+    B = tokens.shape[0]
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens][:, None, :] * math.sqrt(cfg.d_model)
+    positions = cache_len[:, None]
+
+    def body(carry, xs):
+        x, li = carry
+        lp, ck, cv = xs
+        h, (nk, nv) = attention(lp, rms_norm(x, lp["ln_attn"]), positions,
+                                cfg, ctx, kv_cache=(ck, cv),
+                                cache_len=cache_len)
+        x = x + h
+        hin = rms_norm(x, lp["ln_ffn"]).reshape(B, -1)
+        out = jnp.zeros_like(hin)
+        if cfg.moe:
+            mo, _ = moe_ffn(lp, hin, cfg, ctx)
+            out = out + mo
+        if cfg.moe_dense_residual or not cfg.moe:
+            out = out + dense_ffn(lp, hin, cfg)
+        x = x + out.reshape(B, 1, -1)
+        # scatter new kv at cache_len via one-hot (shards over kv_seq)
+        S_max = ck.shape[1]
+        oh = jax.nn.one_hot(cache_len, S_max, dtype=cd)      # (B, S_max)
+        ck = ck + jnp.einsum("bs,bhd->bshd", oh, nk[:, 0])
+        cv = cv + jnp.einsum("bs,bhd->bshd", oh, nv[:, 0])
+        return (x, li + 1), (ck, cv)
+
+    if cfg.scan_layers:
+        (x, _), (nk, nv) = jax.lax.scan(
+            body, (x, 0), (params["layers"], cache["k"], cache["v"]))
+    else:
+        nks, nvs = [], []
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[li], params["layers"])
+            (x, _), (ck2, cv2) = body((x, li),
+                                      (lp, cache["k"][li], cache["v"][li]))
+            nks.append(ck2)
+            nvs.append(cv2)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tied_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cd))[:, 0]
+    logits = logits + _vocab_pad_bias(cfg, logits.dtype)
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,2 @@
+"""Placement engine: the paper's partitioner as the device-placement
+oracle for GNN graphs, DLRM tables and MoE experts (DESIGN.md §3)."""

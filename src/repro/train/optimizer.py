@@ -1,0 +1,147 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Adafactor (Shazeer & Stern, arXiv:1804.04235) is the default for >=10B
+configs: the factored second moment keeps optimizer state ~O(r+c) per
+matrix, which is what lets arctic-480b fit a v5e-256 pod (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"               # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: OptConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(params, cfg: OptConfig):
+    def one(p):
+        if _factored(p.shape, cfg.min_dim_factored):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"slots": jax.tree_util.tree_map(one, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, cfg: OptConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+    lr = cfg.lr
+
+    def upd(g, slot, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if "vr" in slot:
+            vr = beta2 * slot["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * g2.mean(-2)
+            rfac = vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+            prec = rfac[..., None] * vc[..., None, :]
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            prec = v
+            new_slot = {"v": v}
+        u = g * jax.lax.rsqrt(prec + 1e-30)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        newp = p.astype(jnp.float32) - lr * u - \
+            lr * cfg.weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), new_slot
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    slot_leaves = jax.tree_util.tree_flatten(
+        state["slots"], is_leaf=lambda x: isinstance(x, dict) and
+        ("v" in x or "vr" in x))[0]
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, slot_leaves, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_slots = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), [o[1] for o in out])
+    return new_p, {"slots": new_slots, "step": step}
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(g, s, p, cfg)
+    if cfg.name == "adafactor":
+        return (lambda p: adafactor_init(p, cfg),
+                lambda g, s, p: adafactor_update(g, s, p, cfg))
+    raise ValueError(cfg.name)

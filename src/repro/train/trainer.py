@@ -1,0 +1,141 @@
+"""Train-step builder + fault-tolerant training loop.
+
+``make_train_step`` closes over a loss function and an optimizer and
+returns a jit-able ``(state, batch) -> (state, metrics)``. The loop
+layers the production concerns on top:
+
+  * checkpoint/restart   — periodic atomic saves, auto-resume (checkpoint.py)
+  * deterministic data   — batch = f(seed, step): restart-safe skipping
+  * straggler/failure    — synchronous SPMD steps mean a straggler stalls
+    the collective, not corrupts it; recovery = restart from the last
+    checkpoint, possibly on a smaller mesh (elastic re-mesh in
+    checkpoint.restore). A watchdog wall-clock per step aborts the run
+    (exit code 75) so the scheduler can relaunch it.
+  * NaN containment      — non-finite grad norms skip the update and are
+    counted; persistent NaNs abort.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checkpoint
+from .optimizer import OptConfig, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    step_timeout_s: float = 0.0      # 0 = no watchdog
+    max_nan_skips: int = 10
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptConfig,
+                    microbatches: int = 1, accum_dtype=None):
+    """loss_fn(params, batch) -> scalar. Returns step(state, batch).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch
+    is split on the leading axis and grads are averaged over a lax.scan —
+    the standard lever to fit activation transients in HBM (used for the
+    MoE-480B train cells, EXPERIMENTS.md §Perf)."""
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def init_state(params):
+        return {"params": params, "opt": opt_init(params),
+                "step": jnp.zeros((), jnp.int32),
+                "nan_skips": jnp.zeros((), jnp.int32)}
+
+    def _value_and_grad(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def body(carry, b):
+            loss_acc, grads_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, b)
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, g: a + (g / microbatches).astype(a.dtype),
+                grads_acc, grads)
+            return (loss_acc + loss / microbatches, grads_acc), ()
+
+        adt = accum_dtype or jnp.float32
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mb)
+        return loss, grads
+
+    def train_step(state, batch):
+        loss, grads = _value_and_grad(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+
+        def do_update(_):
+            new_p, new_opt = opt_update(grads, state["opt"],
+                                        state["params"])
+            return new_p, new_opt
+
+        def skip(_):
+            return state["params"], state["opt"]
+
+        new_p, new_opt = jax.lax.cond(finite, do_update, skip, None)
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1,
+                     "nan_skips": state["nan_skips"]
+                     + (1 - finite.astype(jnp.int32))}
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "finite": finite}
+        return new_state, metrics
+
+    return init_state, train_step
+
+
+def run_loop(init_state, train_step, make_batch: Callable[[int], Any],
+             params, loop_cfg: TrainLoopConfig,
+             jit: bool = True) -> Tuple[Any, Dict]:
+    """Fault-tolerant loop. Returns (final_state, history)."""
+    # defensive copy: the first jitted step donates the state buffers, and
+    # the caller's params must stay alive for reuse (e.g. eval, restarts)
+    params = jax.tree_util.tree_map(jnp.copy, params)
+    state = init_state(params)
+    start = 0
+    if loop_cfg.ckpt_dir:
+        last = checkpoint.latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            state, extra = checkpoint.restore(loop_cfg.ckpt_dir, state)
+            start = int(extra.get("next_step", last))
+    step_fn = jax.jit(train_step, donate_argnums=(0,)) if jit else train_step
+    history = {"loss": [], "grad_norm": []}
+    for step in range(start, loop_cfg.steps):
+        t0 = time.time()
+        batch = make_batch(step)
+        state, metrics = step_fn(state, batch)
+        if loop_cfg.step_timeout_s and \
+                time.time() - t0 > loop_cfg.step_timeout_s:
+            # straggler watchdog: surface to the scheduler for relaunch
+            raise SystemExit(75)
+        if (step + 1) % loop_cfg.log_every == 0 or step == start:
+            loss = float(metrics["loss"])
+            history["loss"].append((step, loss))
+            history["grad_norm"].append((step, float(metrics["grad_norm"])))
+        nan_skips = int(jax.device_get(state["nan_skips"]))
+        if nan_skips > loop_cfg.max_nan_skips:
+            raise RuntimeError(f"too many non-finite steps ({nan_skips})")
+        if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
+            checkpoint.save(loop_cfg.ckpt_dir, step + 1, state,
+                            extra={"next_step": step + 1})
+            checkpoint.prune(loop_cfg.ckpt_dir, loop_cfg.keep_ckpts)
+    return state, history

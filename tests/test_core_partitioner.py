@@ -1,0 +1,161 @@
+"""Core partitioner behaviour: feasibility, quality, invariants."""
+import numpy as np
+import pytest
+
+from repro.core import PartitionerConfig, fast_config, partition
+from repro.core import baselines, metrics
+from repro.core.coarsening import cluster, enforce_cluster_weights
+from repro.core.contraction import contract
+from repro.core.deep_mgp import ceil2, extract_block_subgraphs
+from repro.graphs import generators
+from repro.graphs.format import from_coo
+
+
+SMALL_CFG = PartitionerConfig(contraction_limit=128, ip_repetitions=2,
+                              num_chunks=4)
+
+
+@pytest.fixture(scope="module")
+def rgg():
+    return generators.make("rgg2d", 4000, 8.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def rhg():
+    return generators.make("rhg", 4000, 12.0, seed=4)
+
+
+# ---------------------------------------------------------------------------
+# feasibility — the paper's headline robustness claim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["rgg2d", "rhg", "ba", "grid2d"])
+@pytest.mark.parametrize("k", [2, 7, 16, 64])
+def test_always_feasible(family, k):
+    g = generators.make(family, 2500, 8.0, seed=11)
+    part = partition(g, k, config=SMALL_CFG)
+    assert part.shape == (g.n,)
+    assert part.min() >= 0 and part.max() < k
+    assert metrics.is_feasible(g, part, k, 0.03), \
+        metrics.summarize(g, part, k, 0.03)
+
+
+def test_feasible_weighted_instance():
+    g = generators.weighted_variant(
+        generators.make("rgg2d", 3000, 8.0, seed=5), seed=6)
+    part = partition(g, 16, config=SMALL_CFG)
+    assert metrics.is_feasible(g, part, 16, 0.03)
+
+
+def test_feasible_large_k_small_C():
+    """Deep MGP handles k comparable to n/C (the paper's large-k regime)."""
+    g = generators.make("rgg2d", 6000, 8.0, seed=7)
+    cfg = PartitionerConfig(contraction_limit=32, ip_repetitions=1,
+                            num_chunks=4)
+    part = partition(g, 256, config=cfg)
+    s = metrics.summarize(g, part, 256, 0.03)
+    assert s["feasible"], s
+    assert s["nonempty_blocks"] == 256
+
+
+# ---------------------------------------------------------------------------
+# quality — deep MGP must beat single-level LP clearly (paper Fig 2 / §3)
+# ---------------------------------------------------------------------------
+
+def test_quality_beats_single_level(rgg):
+    p_deep = partition(rgg, 8, config=SMALL_CFG)
+    p_flat = baselines.single_level_lp(rgg, 8, seed=1)
+    cut_deep = metrics.edge_cut(rgg, p_deep)
+    cut_flat = metrics.edge_cut(rgg, p_flat)
+    assert cut_deep < 0.75 * cut_flat, (cut_deep, cut_flat)
+
+
+def test_quality_comparable_to_plain_mgp(rhg):
+    p_deep = partition(rhg, 8, config=SMALL_CFG)
+    p_plain = baselines.plain_mgp(rhg, 8, cfg=SMALL_CFG)
+    cut_deep = metrics.edge_cut(rhg, p_deep)
+    cut_plain = metrics.edge_cut(rhg, p_plain)
+    # within 2x of plain MGP at small k (paper: within a few percent;
+    # we allow slack for the reduced test configuration)
+    assert cut_deep < 2.0 * max(cut_plain, 1), (cut_deep, cut_plain)
+
+
+# ---------------------------------------------------------------------------
+# coarsening invariants
+# ---------------------------------------------------------------------------
+
+def test_cluster_respects_max_weight(rgg):
+    W = 50
+    labels = cluster(rgg, W, seed=0)
+    cw = np.zeros(rgg.n, dtype=np.int64)
+    np.add.at(cw, labels, rgg.vweights)
+    # multi-member clusters obey W (singletons may exceed, none here since
+    # unit weights and W >= 1)
+    assert cw.max() <= W
+
+
+def test_cluster_shrinks(rgg):
+    labels = cluster(rgg, 50, seed=0)
+    assert np.unique(labels).size < rgg.n * 0.7
+
+
+def test_contract_preserves_totals(rgg):
+    labels = cluster(rgg, 50, seed=0)
+    gc, mapping = contract(rgg, labels)
+    gc.validate()
+    assert gc.total_vweight == rgg.total_vweight
+    # cut of any partition is preserved through contraction+projection
+    part_c = np.arange(gc.n) % 4
+    part_f = part_c[mapping]
+    assert metrics.edge_cut(gc, part_c) == metrics.edge_cut(rgg, part_f)
+
+
+def test_enforce_cluster_weights():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=200)
+    vw = rng.integers(1, 5, size=200)
+    out = enforce_cluster_weights(labels, vw, 20)
+    cw = np.zeros(200, dtype=np.int64)
+    np.add.at(cw, out, vw)
+    members = np.bincount(out, minlength=200)
+    # multi-member clusters fit
+    assert np.all(cw[members > 1] <= 20)
+
+
+# ---------------------------------------------------------------------------
+# subgraph extraction (extension machinery)
+# ---------------------------------------------------------------------------
+
+def test_extract_block_subgraphs(rgg):
+    part = np.arange(rgg.n) % 5
+    graphs, ids = extract_block_subgraphs(rgg, part, 5)
+    assert sum(s.n for s in graphs) == rgg.n
+    for b, (sub, old) in enumerate(zip(graphs, ids)):
+        sub.validate()
+        assert np.all(part[old] == b)
+    # every intra-block edge is preserved
+    src = rgg.arc_tails()
+    intra = (part[src] == part[rgg.adjncy])
+    assert sum(s.m for s in graphs) == int(intra.sum())
+
+
+def test_ceil2():
+    assert [ceil2(x) for x in [1, 2, 3, 4, 5, 127, 128, 129]] == \
+        [1, 2, 4, 4, 8, 128, 128, 256]
+
+
+# ---------------------------------------------------------------------------
+# metrics self-checks
+# ---------------------------------------------------------------------------
+
+def test_edge_cut_manual():
+    #  0 - 1 - 2 - 3 (path), split in the middle
+    g = from_coo(4, np.array([0, 1, 2]), np.array([1, 2, 3]))
+    part = np.array([0, 0, 1, 1])
+    assert metrics.edge_cut(g, part) == 1
+    assert metrics.imbalance(g, part, 2) == 0.0
+
+
+def test_l_max_allows_heaviest_vertex():
+    # L_max >= c(V)/k + max_c guarantees feasibility is always reachable
+    assert metrics.l_max(100, 10, 0.0, 50) >= 60

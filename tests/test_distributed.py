@@ -1,0 +1,60 @@
+"""Distributed partitioner tests.
+
+jax locks the device count at first init, so multi-device tests run in
+subprocesses via ``repro.launch.selftest`` with
+``--xla_force_host_platform_device_count``. Each selftest prints one JSON
+line per check and exits nonzero on failure.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_selftest(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest", *extra],
+        capture_output=True, text=True, env=env, timeout=540)
+    lines = [json.loads(l) for l in proc.stdout.splitlines()
+             if l.startswith("{")]
+    assert proc.returncode == 0, (proc.stdout, proc.stderr[-2000:])
+    return lines
+
+
+@pytest.mark.slow
+def test_collectives_8dev():
+    res = run_selftest("--devices", "8", "--test", "collectives")
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_dist_cluster_8dev():
+    res = run_selftest("--devices", "8", "--test", "cluster", "--n", "3000")
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_dist_refine_8dev():
+    res = run_selftest("--devices", "8", "--test", "refine", "--n", "3000")
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_dist_partition_8dev():
+    res = run_selftest("--devices", "8", "--test", "partition",
+                       "--n", "3000")
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_dist_partition_nonsquare_grid_6dev():
+    """6 PEs -> 2x3 grid routing."""
+    res = run_selftest("--devices", "6", "--test", "partition",
+                       "--n", "2000", "--k", "4")
+    assert all(r["pass"] for r in res), res

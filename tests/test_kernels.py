@@ -1,0 +1,172 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
+interpret=True (CPU) against pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import generators
+from repro.kernels.bsr_spmm.ops import graph_to_bsr, spmm
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_1row
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.lp_gain.lp_gain import lp_gain_ell
+from repro.kernels.lp_gain.ops import lp_gain
+from repro.kernels.lp_gain.ref import lp_gain_ell_ref
+
+
+# ---------------------------------------------------------------------------
+# lp_gain
+# ---------------------------------------------------------------------------
+
+def _rand_lp_inputs(rng, n, d, n_labels, budget):
+    lab = rng.integers(0, n_labels, (n, d)).astype(np.int32)
+    lab[rng.random((n, d)) < 0.2] = -1                  # padding
+    w = rng.integers(1, 5, (n, d)).astype(np.float32)
+    w[lab < 0] = 0.0
+    cw = rng.integers(1, budget + 3, n_labels).astype(np.float32)
+    tgt_w = np.where(lab >= 0, cw[np.maximum(lab, 0)], np.inf
+                     ).astype(np.float32)
+    own = rng.integers(0, n_labels, (n, 1)).astype(np.int32)
+    vw = rng.integers(1, 3, (n, 1)).astype(np.float32)
+    return lab, w, tgt_w, own, vw
+
+
+@pytest.mark.parametrize("n,d", [(256, 128), (512, 256), (1024, 128)])
+def test_lp_gain_matches_ref(n, d):
+    rng = np.random.default_rng(n + d)
+    budget = 8.0
+    lab, w, tgt_w, own, vw = _rand_lp_inputs(rng, n, d, 50, budget)
+    args = [jnp.asarray(x) for x in (lab, w, tgt_w, own, vw)]
+    b = jnp.full((1, 1), budget, jnp.float32)
+    best, target, own_conn = lp_gain_ell(*args, b, row_tile=128)
+    rbest, rtarget, rown = lp_gain_ell_ref(*args, b)
+    np.testing.assert_allclose(np.asarray(best), np.asarray(rbest),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(target), np.asarray(rtarget))
+    np.testing.assert_allclose(np.asarray(own_conn), np.asarray(rown),
+                               rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_labels=st.integers(2, 64),
+       budget=st.integers(1, 20))
+def test_lp_gain_property(seed, n_labels, budget):
+    rng = np.random.default_rng(seed)
+    lab, w, tgt_w, own, vw = _rand_lp_inputs(rng, 256, 128, n_labels,
+                                             budget)
+    args = [jnp.asarray(x) for x in (lab, w, tgt_w, own, vw)]
+    b = jnp.full((1, 1), float(budget), jnp.float32)
+    best, target, own_conn = lp_gain_ell(*args, b, row_tile=128)
+    rbest, rtarget, rown = lp_gain_ell_ref(*args, b)
+    np.testing.assert_allclose(np.asarray(best), np.asarray(rbest),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(target), np.asarray(rtarget))
+
+
+def test_lp_gain_on_graph_agrees_with_partitioner_math():
+    """Kernel gains == brute-force edge-scan gains on a real graph."""
+    g = generators.make("rgg2d", 600, 8.0, seed=2)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 8, g.n)
+    cw = np.zeros(8, dtype=np.int64)
+    np.add.at(cw, labels, g.vweights)
+    budget = float(cw.max() + 10)
+    gain, target, own_conn = lp_gain(g, labels, cw, budget, row_tile=128)
+    src = g.arc_tails()
+    conn = np.zeros((g.n, 8))
+    np.add.at(conn, (src, labels[g.adjncy]), g.eweights)
+    own_ref = conn[np.arange(g.n), labels]
+    np.testing.assert_allclose(own_conn, own_ref, rtol=1e-6)
+    masked = conn.copy()
+    masked[np.arange(g.n), labels] = -1
+    best_ref = masked.max(axis=1)
+    has = best_ref > 0
+    np.testing.assert_allclose(gain[has], (best_ref - own_ref)[has],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bsr_spmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,f,bs", [(300, 64, 128), (700, 130, 128)])
+def test_bsr_spmm_matches_dense(n, f, bs):
+    g = generators.make("rgg2d", n, 8.0, seed=3)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((g.n, f)).astype(np.float32)
+    y = spmm(g, x, bs=bs)
+    # dense reference
+    a = np.zeros((g.n, g.n), dtype=np.float32)
+    src = g.arc_tails()
+    a[src, np.asarray(g.adjncy)] = g.eweights
+    np.testing.assert_allclose(y, a @ x, rtol=5e-5, atol=5e-4)
+
+
+def test_bsr_kernel_vs_ref_random_blocks():
+    rng = np.random.default_rng(7)
+    rb, nnz, bs, f = 4, 3, 128, 128
+    col = rng.integers(0, rb, rb * nnz).astype(np.int32)
+    vals = (rng.random((rb * nnz, bs, bs)) *
+            (rng.random((rb * nnz, bs, bs)) < 0.05)).astype(np.float32)
+    x = rng.standard_normal((rb * bs, f)).astype(np.float32)
+    out = bsr_spmm(jnp.asarray(col), jnp.asarray(vals), jnp.asarray(x),
+                   block_rows=rb, nnz_per_row=nnz)
+    ref = bsr_spmm_ref(jnp.asarray(col), jnp.asarray(vals), jnp.asarray(x),
+                       block_rows=rb, nnz_per_row=nnz)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_bsr_spmm_property(seed):
+    rng = np.random.default_rng(seed)
+    rb, nnz, bs, f = 3, 2, 128, 128
+    col = rng.integers(0, rb, rb * nnz).astype(np.int32)
+    vals = rng.standard_normal((rb * nnz, bs, bs)).astype(np.float32)
+    x = rng.standard_normal((rb * bs, f)).astype(np.float32)
+    out = bsr_spmm(jnp.asarray(col), jnp.asarray(vals), jnp.asarray(x),
+                   block_rows=rb, nnz_per_row=nnz)
+    ref = bsr_spmm_ref(jnp.asarray(col), jnp.asarray(vals), jnp.asarray(x),
+                       block_rows=rb, nnz_per_row=nnz)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,bag,v,d", [(32, 1, 500, 64), (16, 4, 200, 128),
+                                       (8, 2, 100, 200)])
+def test_embedding_bag_matches_ref(b, bag, v, d):
+    rng = np.random.default_rng(b * bag)
+    idx = rng.integers(0, v, (b, bag)).astype(np.int32)
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    out = embedding_bag(idx, table)
+    ref = embedding_bag_ref(jnp.asarray(idx), jnp.asarray(table))
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), bag=st.integers(1, 6))
+def test_embedding_bag_property(seed, bag):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 64, (8, bag)).astype(np.int32)
+    table = rng.standard_normal((64, 128)).astype(np.float32)
+    out = embedding_bag_1row(jnp.asarray(idx), jnp.asarray(table))
+    ref = embedding_bag_ref(jnp.asarray(idx), jnp.asarray(table))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_duplicate_indices():
+    """Same row repeated in a bag must be summed, not deduped."""
+    table = np.eye(8, 128, dtype=np.float32)
+    idx = np.array([[2, 2, 2]], dtype=np.int32)
+    out = embedding_bag(idx, table)
+    assert out[0, 2] == pytest.approx(3.0)

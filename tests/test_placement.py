@@ -1,0 +1,56 @@
+"""Placement engine: the paper's technique wired into the framework."""
+import numpy as np
+import pytest
+
+from repro.core.partitioner import PartitionerConfig
+from repro.graphs import generators
+from repro.placement import dlrm_placement, gnn_placement, moe_placement
+
+
+def test_gnn_placement_cuts_halo():
+    """Partitioner placement must beat the naive contiguous split on a
+    geometry-free (shuffled-id) graph — the collective-term reduction
+    that EXPERIMENTS.md §Perf quantifies."""
+    g = generators.make("rgg2d", 3000, 8.0, seed=3)
+    # shuffle vertex ids so the naive contiguous split has no locality
+    rng = np.random.default_rng(0)
+    from repro.graphs.format import permute
+    g, _ = permute(g, rng.permutation(g.n))
+    plan = gnn_placement.plan(
+        g, 8, config=PartitionerConfig(contraction_limit=64,
+                                       ip_repetitions=2, num_chunks=4))
+    assert plan.halo_bytes < 0.7 * plan.baseline_halo_bytes, \
+        (plan.halo_bytes, plan.baseline_halo_bytes)
+    # the relabelled graph is a consistent permutation of the input
+    assert plan.graph.m == g.m
+    assert plan.offsets[-1] == g.n
+
+
+def test_dlrm_placement_balanced():
+    rng = np.random.default_rng(1)
+    B, F = 512, 26
+    # two clusters of co-firing features
+    sparse = rng.integers(0, 1000, (B, F, 1))
+    off = rng.random((B, 1)) < 0.5
+    sparse[:, :13][np.broadcast_to(off[:, :, None], (B, 13, 1))] = -1
+    sparse[:, 13:][np.broadcast_to(~off[:, :, None], (B, 13, 1))] = -1
+    rows = rng.integers(10_000, 1_000_000, F)
+    out = dlrm_placement.plan(sparse, rows, n_shards=4, epsilon=0.5)
+    assert out["assignment"].shape == (F,)
+    assert len(np.unique(out["assignment"])) == 4
+
+
+def test_moe_placement_beats_naive():
+    rng = np.random.default_rng(2)
+    E, T = 32, 20000
+    # block-structured co-activation: experts pair within groups of 8
+    grp = rng.integers(0, 4, T)
+    a = grp * 8 + rng.integers(0, 8, T)
+    b = grp * 8 + rng.integers(0, 8, T)
+    # shuffle expert ids so naive contiguous ranges straddle groups
+    shuf = rng.permutation(E)
+    samples = np.stack([shuf[a], shuf[b]], axis=1)
+    out = moe_placement.plan(samples, E, n_pods=4)
+    assert out["cross_pod_fraction"] <= out["naive_cross_pod_fraction"]
+    assert out["cross_pod_fraction"] < 0.25, out
+    assert sum(out["experts_per_pod"]) == E

@@ -1,0 +1,128 @@
+"""Training substrate: optimizers, checkpointing, fault tolerance,
+gradient accumulation, data determinism."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.common import init_params
+from repro.train import checkpoint, data
+from repro.train.optimizer import (OptConfig, adafactor_init,
+                                   adafactor_update, adamw_init,
+                                   adamw_update, clip_by_global_norm)
+from repro.train.trainer import TrainLoopConfig, make_train_step, run_loop
+
+CFG = T.TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=128, vocab=256, remat=False)
+
+
+def _params():
+    return init_params(T.build_specs(CFG), jax.random.key(0))
+
+
+def _mk(step):
+    return {k: jnp.asarray(v) for k, v in
+            data.lm_batch(step, 4, 32, 256).items()}
+
+
+def test_loss_decreases_adamw():
+    init_state, step = make_train_step(
+        lambda p, b: T.loss_fn(p, b, CFG), OptConfig(lr=1e-3))
+    state, hist = run_loop(init_state, step, _mk, _params(),
+                           TrainLoopConfig(steps=25, log_every=5))
+    assert hist["loss"][-1][1] < hist["loss"][0][1]
+
+
+def test_loss_decreases_adafactor():
+    init_state, step = make_train_step(
+        lambda p, b: T.loss_fn(p, b, CFG),
+        OptConfig(name="adafactor", lr=1e-2))
+    state, hist = run_loop(init_state, step, _mk, _params(),
+                           TrainLoopConfig(steps=25, log_every=5))
+    assert hist["loss"][-1][1] < hist["loss"][0][1]
+
+
+def test_grad_accumulation_matches_full_batch():
+    toks = jax.random.randint(jax.random.key(1), (8, 16), 0, 256)
+    cfg32 = T.TransformerConfig(**{**CFG.__dict__,
+                                   "compute_dtype": jnp.float32})
+    i1, s1 = make_train_step(lambda p, b: T.loss_fn(p, b, cfg32),
+                             OptConfig(lr=1e-3), microbatches=1)
+    i4, s4 = make_train_step(lambda p, b: T.loss_fn(p, b, cfg32),
+                             OptConfig(lr=1e-3), microbatches=4)
+    p = _params()
+    st1, m1 = s1(i1(p), {"tokens": toks})
+    st4, m4 = s4(i4(p), {"tokens": toks})
+    for a, b in zip(jax.tree_util.tree_leaves(st1["params"]),
+                    jax.tree_util.tree_leaves(st4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_checkpoint_roundtrip_and_resume():
+    with tempfile.TemporaryDirectory() as td:
+        init_state, step = make_train_step(
+            lambda p, b: T.loss_fn(p, b, CFG), OptConfig(lr=1e-3))
+        state, _ = run_loop(init_state, step, _mk, _params(),
+                            TrainLoopConfig(steps=10, ckpt_dir=td,
+                                            ckpt_every=5, log_every=5))
+        assert checkpoint.latest_step(td) == 10
+        # resume continues from step 10 (no recompute of earlier steps)
+        state2, hist2 = run_loop(init_state, step, _mk, _params(),
+                                 TrainLoopConfig(steps=12, ckpt_dir=td,
+                                                 ckpt_every=50,
+                                                 log_every=1))
+        assert hist2["loss"][0][0] == 10
+        # prune keeps the newest
+        checkpoint.prune(td, keep=1)
+        steps = [d for d in os.listdir(td) if d.startswith("step_")]
+        assert len(steps) == 1
+
+
+def test_checkpoint_restore_with_shardings():
+    """Elastic re-mesh path: restore with explicit device placement."""
+    state = {"a": jnp.arange(16.0).reshape(4, 4),
+             "b": jnp.zeros((3,), jnp.int32)}
+    with tempfile.TemporaryDirectory() as td:
+        checkpoint.save(td, 1, state)
+        sh = jax.tree_util.tree_map(
+            lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+            state)
+        restored, _ = checkpoint.restore(td, state, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(state["a"]))
+
+
+def test_nan_containment():
+    """A poisoned batch must not corrupt params (update skipped)."""
+    init_state, step = make_train_step(
+        lambda p, b: T.loss_fn(p, b, CFG) +
+        jnp.where(b["tokens"][0, 0] == 0, jnp.nan, 0.0),
+        OptConfig(lr=1e-3))
+    state = init_state(_params())
+    bad = {"tokens": jnp.zeros((4, 32), jnp.int32)}
+    before = jax.tree_util.tree_leaves(state["params"])[0].copy()
+    state, metrics = step(state, bad)
+    assert not bool(metrics["finite"])
+    after = jax.tree_util.tree_leaves(state["params"])[0]
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
+    assert int(state["nan_skips"]) == 1
+
+
+def test_grad_clip():
+    grads = {"w": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_data_determinism():
+    a = data.lm_batch(7, 4, 16, 100, seed=3)
+    b = data.lm_batch(7, 4, 16, 100, seed=3)
+    c = data.lm_batch(8, 4, 16, 100, seed=3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
