@@ -1,0 +1,14 @@
+"""Distributed subsystem (paper §4–5): named-axis sharding rules for the
+launch/model layers, sparse all-to-all collectives, distributed LP
+clustering and the distributed deep-MGP driver.
+
+Import layering: ``sharding`` is dependency-light (models import it at
+module load); the heavy shard_map machinery lives in ``collectives`` /
+``dist_lp`` / ``dist_partitioner`` and is imported lazily by callers so
+that merely importing a model never touches jax device state.
+"""
+from .sharding import (DEFAULT_RULES, NULL_CTX, ShardCtx, resolve_axes,
+                       spec_shardings)
+
+__all__ = ["DEFAULT_RULES", "NULL_CTX", "ShardCtx", "resolve_axes",
+           "spec_shardings"]

@@ -1,0 +1,89 @@
+"""Sparse all-to-all collectives (paper §3, Communication).
+
+Both primitives transpose a per-PE message slab: each PE holds a local
+array ``slab`` of shape (P, ...) where ``slab[q]`` is the message destined
+for PE q; after the exchange PE p holds ``out[q] == slab_of_q[p]``.
+
+``direct_all_to_all`` issues the single P-way collective. For large P the
+paper routes the same payload through a two-level a x b grid
+(``grid_all_to_all``): messages first travel within grid rows (grouped by
+destination column), then within columns — 2·(a+b) partners per PE instead
+of P, at the cost of forwarding each payload twice. Non-square P uses the
+largest divisor a <= sqrt(P) (6 PEs -> 2x3); prime P degenerates to the
+direct exchange.
+
+All functions are jit-side and must run inside ``shard_map`` over the 1D
+'pe' mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def direct_all_to_all(slab: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """One-phase transposition: out[q] = slab_of_q[p]."""
+    return lax.all_to_all(slab, axis_name, 0, 0, tiled=True)
+
+
+def grid_factors(P: int) -> Tuple[int, int]:
+    """(a, b) with a*b == P, a <= b, a the largest divisor <= sqrt(P)."""
+    a = 1
+    d = 1
+    while d * d <= P:
+        if P % d == 0:
+            a = d
+        d += 1
+    return a, P // a
+
+
+def grid_all_to_all(slab: jnp.ndarray, axis_name: str, P: int) -> jnp.ndarray:
+    """Two-level all-to-all through an a x b PE grid (PE p = (p//b, p%b)).
+
+    Phase 1 transposes within grid rows over the destination-column axis;
+    phase 2 within grid columns over the destination-row axis. The result
+    is bit-identical to ``direct_all_to_all``.
+    """
+    a, b = grid_factors(P)
+    if a == 1:  # prime P: no nontrivial grid, route directly
+        return direct_all_to_all(slab, axis_name)
+    row_groups = [[r * b + c for c in range(b)] for r in range(a)]
+    col_groups = [[r * b + c for r in range(a)] for c in range(b)]
+    tail = slab.shape[1:]
+    m = slab.reshape((a, b) + tail)            # [dst_row, dst_col]
+    m = lax.all_to_all(m, axis_name, 1, 1, axis_index_groups=row_groups,
+                       tiled=True)             # [dst_row, src_col]
+    m = lax.all_to_all(m, axis_name, 0, 0, axis_index_groups=col_groups,
+                       tiled=True)             # [src_row, src_col]
+    return m.reshape((P,) + tail)
+
+
+def all_to_all(slab: jnp.ndarray, axis_name: str, P: int,
+               use_grid: bool = False) -> jnp.ndarray:
+    return grid_all_to_all(slab, axis_name, P) if use_grid \
+        else direct_all_to_all(slab, axis_name)
+
+
+def halo_exchange(vals: jnp.ndarray,
+                  send_idx: jnp.ndarray,
+                  recv_slot: jnp.ndarray,
+                  n_ghost: int,
+                  axis_name: str,
+                  P: int,
+                  use_grid: bool = False) -> jnp.ndarray:
+    """Ghost-vertex value exchange over a ``GraphShards`` halo plan.
+
+    ``vals``: (n_loc,) per-PE values of owned vertices.
+    ``send_idx``/``recv_slot``: this PE's (P, S) rows of the static halo
+    schedule (sentinels n_loc / n_ghost mark padding).
+    Returns the (n_ghost,) ghost values; padded ghost slots read 0.
+    """
+    pad = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
+    msg = pad[send_idx]                                   # (P, S)
+    rcv = all_to_all(msg, axis_name, P, use_grid=use_grid)
+    out = jnp.zeros((n_ghost + 1,), vals.dtype)
+    out = out.at[recv_slot.reshape(-1)].set(rcv.reshape(-1), mode="drop")
+    return out[:n_ghost]

@@ -1,0 +1,26 @@
+"""Version-compat shims for jax APIs the distributed subsystem relies on.
+
+The repo targets the baked-in toolchain (jax 0.4.x) but keeps working on
+newer releases where ``shard_map`` graduated out of ``jax.experimental``
+and ``make_mesh`` grew an ``axis_types`` parameter.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh that tolerates the absence of AxisType (jax 0.4.x)."""
+    if hasattr(jax.sharding, "AxisType"):
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -1,0 +1,344 @@
+"""Distributed size-constrained label propagation (paper §4).
+
+shard_map port of the chunked LP kernels in ``core/lp.py`` over the
+``GraphShards`` layout of ``graphs/distribute.py``. Each PE owns a
+contiguous vertex range; labels are *global* ids, ghost labels are
+refreshed through the static halo schedule after every chunk, and cluster
+weights are kept as a replicated (n+1,) table synchronized by psum.
+
+Weight constraint handling follows the paper's two tiers:
+
+  * intra-PE races within a chunk use the exact hash-ordered revert of
+    ``core.lp._cluster_chunk`` against the PE's local view;
+  * cross-PE races are only detected after the psum — overweight clusters
+    then *bounce* this chunk's incoming moves back (approximate revert,
+    §4 Coarsening). Exact enforcement happens on the host before
+    contraction (``core.coarsening.enforce_cluster_weights``).
+
+The bounce decision depends only on psum results, never on message
+routing, so grid and direct all-to-all runs produce identical labels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from ..core.lp import (I32_MAX, _argmax_target, _group_conns, _hash32,
+                       _own_connection)
+from ..graphs.distribute import GraphShards, chunk_local_arcs
+from .collectives import halo_exchange
+from .compat import shard_map
+
+_BIG = np.int32(2**30)
+
+
+def _check_int32_weights(shards: GraphShards) -> None:
+    """Same guard as core.lp.build_chunks: the replicated int32 weight
+    tables (psum-accumulated) must never wrap."""
+    tot_v = int(shards.vweights.astype(np.int64).sum())
+    tot_e = int(shards.arc_w.astype(np.int64).sum())
+    assert tot_v < 2**31 and tot_e < 2**31, \
+        "int32 jit path requires total weights < 2^31"
+
+
+def make_mesh_1d(P: int) -> Mesh:
+    """1D 'pe' mesh over the first P devices."""
+    devs = jax.devices()
+    assert len(devs) >= P, (len(devs), P)
+    return Mesh(np.array(devs[:P]), ("pe",))
+
+
+# ---------------------------------------------------------------------------
+# per-PE chunk step (jit-side)
+# ---------------------------------------------------------------------------
+
+def _local_moves(lab_src_tab, tab, cw_like, budget_like, vw_pad,
+                 c_src, c_dst, c_w, salt, n_loc, cluster_mode):
+    """Shared gain/argmax stage. Returns (move, target, lab_cur) over the
+    (n_loc+1,) src space. ``cw_like``/``budget_like`` are indexed by label
+    value; in cluster mode budget is the scalar W broadcast."""
+    lab_dst = tab[c_dst]
+    s_src, s_lab, s_w = lax.sort((c_src, lab_dst, c_w), num_keys=2)
+    conn = _group_conns(s_src, s_lab, s_w)
+    own_lab = lab_src_tab[s_src]
+    staying = s_lab == own_lab
+    fits = cw_like[s_lab] + vw_pad[s_src] <= budget_like[s_lab]
+    if cluster_mode:
+        fits = fits | staying
+    else:
+        fits = fits & ~staying
+    score = jnp.where(fits, conn, -1)
+    best, target = _argmax_target(s_src, s_lab, score, cw_like[s_lab],
+                                  salt, n_loc)
+    own_conn = _own_connection(s_src, s_lab, s_w, lab_src_tab, n_loc)
+    lab_cur = lab_src_tab
+    tgt_safe = jnp.where(target < I32_MAX, target, lab_cur)
+    if cluster_mode:
+        move = (best > own_conn) & (tgt_safe != lab_cur) & \
+            (target < I32_MAX) & (best > 0)
+    else:
+        gain = best - own_conn
+        lighter = cw_like[tgt_safe] + vw_pad < cw_like[lab_cur]
+        move = (target < I32_MAX) & (best >= 0) & \
+            ((gain > 0) | ((gain == 0) & lighter))
+    move = move.at[n_loc].set(False)
+    return move, tgt_safe, lab_cur
+
+
+def _intra_pe_revert(move, tgt, lab_cur, vw_pad, cw, d_in, d_out,
+                     salt, n_loc, num_labels, W):
+    """Exact hash-ordered revert of this PE's chunk moves against its local
+    weight view (port of core.lp._cluster_chunk's revert block)."""
+    new_cw = cw + d_in - d_out
+    new_lab = jnp.where(move, tgt, lab_cur)
+    over = new_cw > W
+    cand = move & over[new_lab]
+    num = n_loc + 1
+    rk = _hash32(jnp.arange(num, dtype=jnp.int32),
+                 salt ^ np.uint32(0x9E3779B9))
+    sort_lab = jnp.where(cand, new_lab, jnp.int32(num_labels))
+    o_lab, _, o_v = lax.sort(
+        (sort_lab, rk, jnp.arange(num, dtype=jnp.int32)), num_keys=2)
+    o_vw = jnp.where(o_lab < num_labels, vw_pad[o_v], 0)
+    csum = jnp.cumsum(o_vw)
+    grp_start = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_), o_lab[1:] != o_lab[:-1]])
+    gid = jnp.cumsum(grp_start.astype(jnp.int32)) - 1
+    base = jax.ops.segment_min(
+        jnp.where(grp_start, csum - o_vw, I32_MAX), gid, num_segments=num)
+    within = csum - base[gid]
+    lab_safe = jnp.where(o_lab < num_labels, o_lab, 0)
+    moved_in = jax.ops.segment_sum(o_vw, gid, num_segments=num)[gid]
+    allowed = jnp.maximum(W - (new_cw[lab_safe] - moved_in), 0)
+    revert = (o_lab < num_labels) & (within > allowed)
+    rv = jnp.zeros(num, dtype=jnp.bool_).at[o_v].set(revert, mode="drop")
+    return move & ~rv
+
+
+def _apply_and_sync(move, tgt, lab_cur, vw_pad, cw, num_labels):
+    """Scatter move deltas into the replicated label-weight table and psum.
+    Returns the updated weight table."""
+    vw_m = jnp.where(move, vw_pad, 0)
+    d_in = jnp.zeros((num_labels,), jnp.int32).at[tgt].add(vw_m,
+                                                           mode="drop")
+    d_out = jnp.zeros((num_labels,), jnp.int32).at[lab_cur].add(vw_m,
+                                                                mode="drop")
+    delta = lax.psum(d_in - d_out, "pe")
+    return cw + delta
+
+
+def _bounce_back(move, tgt, lab_cur, vw_pad, cw, budget_like, num_labels):
+    """Approximate cross-PE revert: labels that exceeded their budget after
+    the psum bounce this chunk's incoming moves back everywhere."""
+    over = cw > budget_like
+    bounce = move & over[tgt]
+    vw_b = jnp.where(bounce, vw_pad, 0)
+    b_in = jnp.zeros((num_labels,), jnp.int32).at[lab_cur].add(vw_b,
+                                                               mode="drop")
+    b_out = jnp.zeros((num_labels,), jnp.int32).at[tgt].add(vw_b,
+                                                            mode="drop")
+    cw = cw + lax.psum(b_in - b_out, "pe")
+    return move & ~bounce, cw
+
+
+# ---------------------------------------------------------------------------
+# distributed clustering
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
+                      use_grid):
+    num_labels = n + 1           # label values are global vertex ids
+
+    def per_pe(src, dst, w, vw_loc, lgid, ggid, send_idx, recv_slot,
+               salts, W):
+        src, dst, w = src[0], dst[0], w[0]
+        vw_loc, lgid, ggid = vw_loc[0], lgid[0], ggid[0]
+        send_idx, recv_slot = send_idx[0], recv_slot[0]
+        vw_pad = jnp.concatenate([vw_loc, jnp.zeros((1,), jnp.int32)])
+        # global per-cluster weights, replicated: every vertex starts as a
+        # singleton so cw == scattered vertex weights
+        cw = jnp.zeros((num_labels,), jnp.int32).at[lgid].add(
+            vw_loc, mode="drop")
+        cw = lax.psum(cw, "pe")
+        cw = cw.at[n].set(_BIG)              # sentinel label never a target
+        budget = jnp.full((num_labels,), W, jnp.int32).at[n].set(-_BIG)
+        lab_loc = lgid.astype(jnp.int32)     # own global id = own cluster
+        lab_ghost = ggid.astype(jnp.int32)
+
+        def chunk_body(carry, xs):
+            lab_loc, lab_ghost, cw = carry
+            c_src, c_dst, c_w, salt = xs
+            tab = jnp.concatenate(
+                [lab_loc, lab_ghost, jnp.full((1,), n, jnp.int32)])
+            lab_src_tab = jnp.concatenate(
+                [lab_loc, jnp.full((1,), n, jnp.int32)])
+            move, tgt, lab_cur = _local_moves(
+                lab_src_tab, tab, cw, budget, vw_pad, c_src, c_dst, c_w,
+                salt, n_loc, cluster_mode=True)
+            vw_m = jnp.where(move, vw_pad, 0)
+            d_in = jnp.zeros((num_labels,), jnp.int32).at[tgt].add(
+                vw_m, mode="drop")
+            d_out = jnp.zeros((num_labels,), jnp.int32).at[lab_cur].add(
+                vw_m, mode="drop")
+            move = _intra_pe_revert(move, tgt, lab_cur, vw_pad, cw,
+                                    d_in, d_out, salt, n_loc, num_labels,
+                                    W)
+            cw = _apply_and_sync(move, tgt, lab_cur, vw_pad, cw,
+                                 num_labels)
+            move, cw = _bounce_back(move, tgt, lab_cur, vw_pad, cw,
+                                    budget, num_labels)
+            lab_loc = jnp.where(move[:n_loc], tgt[:n_loc], lab_loc)
+            lab_ghost = halo_exchange(lab_loc, send_idx, recv_slot,
+                                      n_ghost, "pe", P, use_grid=use_grid)
+            return (lab_loc, lab_ghost, cw), ()
+
+        for it in range(num_iterations):
+            (lab_loc, lab_ghost, cw), _ = lax.scan(
+                chunk_body, (lab_loc, lab_ghost, cw),
+                (src, dst, w, salts[it]))
+        return lab_loc[None]
+
+    pe = PS("pe")
+    rep = PS()
+    fn = shard_map(per_pe, mesh=mesh,
+                   in_specs=(pe, pe, pe, pe, pe, pe, pe, pe, rep, rep),
+                   out_specs=pe)
+    return jax.jit(fn)
+
+
+def dist_cluster(shards: GraphShards,
+                 max_cluster_weight: int,
+                 num_iterations: int = 3,
+                 num_chunks: int = 8,
+                 seed: int = 0,
+                 use_grid: bool = True) -> np.ndarray:
+    """Distributed size-constrained LP clustering over graph shards.
+
+    Returns (n,) int64 global cluster labels (label values are vertex
+    ids). Cluster weights respect ``max_cluster_weight`` up to cross-PE
+    race tolerance; callers contract only after exact host-side
+    enforcement.
+    """
+    P, n = shards.P, shards.n
+    _check_int32_weights(shards)
+    mesh = make_mesh_1d(P)
+    srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
+    B = srcs.shape[1]
+    fn = _build_cluster_fn(mesh, P, n, shards.n_loc, shards.n_ghost, B,
+                           num_iterations, use_grid)
+    salts = (np.arange(num_iterations * B, dtype=np.uint64).reshape(
+        num_iterations, B) * 0x85EBCA6B + seed * 1000003) % (2**32)
+    lab = fn(jnp.asarray(srcs), jnp.asarray(dsts), jnp.asarray(ws),
+             jnp.asarray(shards.vweights), jnp.asarray(shards.local_gid),
+             jnp.asarray(shards.ghost_gid), jnp.asarray(shards.send_idx),
+             jnp.asarray(shards.recv_slot),
+             jnp.asarray(salts.astype(np.uint32)),
+             jnp.int32(max(1, min(int(max_cluster_weight), int(_BIG)))))
+    lab = np.asarray(lab)
+    out = np.empty(n, dtype=np.int64)
+    valid = shards.local_gid < n
+    out[shards.local_gid[valid]] = lab[valid]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# distributed k-way refinement
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _build_refine_fn(mesh, P, k, n_loc, n_ghost, B, num_iterations,
+                     use_grid):
+    kk = k + 1                   # sentinel block k
+
+    def per_pe(src, dst, w, vw_loc, part_loc, part_ghost, send_idx,
+               recv_slot, salts, l_max):
+        src, dst, w = src[0], dst[0], w[0]
+        vw_loc, part_loc, part_ghost = vw_loc[0], part_loc[0], part_ghost[0]
+        send_idx, recv_slot = send_idx[0], recv_slot[0]
+        vw_pad = jnp.concatenate([vw_loc, jnp.zeros((1,), jnp.int32)])
+        bw = jnp.zeros((kk,), jnp.int32).at[part_loc].add(vw_loc,
+                                                          mode="drop")
+        bw = lax.psum(bw, "pe")
+        bw = bw.at[k].set(_BIG)
+        budget = jnp.concatenate([l_max.astype(jnp.int32),
+                                  jnp.full((1,), -_BIG, jnp.int32)])
+
+        def chunk_body(carry, xs):
+            lab_loc, lab_ghost, bw = carry
+            c_src, c_dst, c_w, salt = xs
+            tab = jnp.concatenate(
+                [lab_loc, lab_ghost, jnp.full((1,), k, jnp.int32)])
+            lab_src_tab = jnp.concatenate(
+                [lab_loc, jnp.full((1,), k, jnp.int32)])
+            move, tgt, lab_cur = _local_moves(
+                lab_src_tab, tab, bw, budget, vw_pad, c_src, c_dst, c_w,
+                salt, n_loc, cluster_mode=False)
+            bw = _apply_and_sync(move, tgt, lab_cur, vw_pad, bw, kk)
+            move, bw = _bounce_back(move, tgt, lab_cur, vw_pad, bw,
+                                    budget, kk)
+            lab_loc = jnp.where(move[:n_loc], tgt[:n_loc], lab_loc)
+            lab_ghost = halo_exchange(lab_loc, send_idx, recv_slot,
+                                      n_ghost, "pe", P, use_grid=use_grid)
+            return (lab_loc, lab_ghost, bw), ()
+
+        lab_loc = part_loc
+        lab_ghost = part_ghost
+        for it in range(num_iterations):
+            (lab_loc, lab_ghost, bw), _ = lax.scan(
+                chunk_body, (lab_loc, lab_ghost, bw),
+                (src, dst, w, salts[it]))
+        return lab_loc[None]
+
+    pe = PS("pe")
+    rep = PS()
+    fn = shard_map(per_pe, mesh=mesh,
+                   in_specs=(pe, pe, pe, pe, pe, pe, pe, pe, rep, rep),
+                   out_specs=pe)
+    return jax.jit(fn)
+
+
+def dist_lp_refine(shards: GraphShards,
+                   part: np.ndarray,
+                   l_max_vec: np.ndarray,
+                   num_iterations: int = 2,
+                   num_chunks: int = 8,
+                   seed: int = 0,
+                   use_grid: bool = True) -> np.ndarray:
+    """Distributed chunked LP refinement of a k-way partition.
+
+    Same move rule as ``core.lp._refine_chunk`` (positive gain, or zero
+    gain into the lighter block), block weights replicated and psum-synced
+    per chunk, overweight blocks bouncing racing moves back. May leave the
+    partition slightly infeasible; pair with a balancing pass.
+    """
+    P, n = shards.P, shards.n
+    _check_int32_weights(shards)
+    k = int(l_max_vec.shape[0])
+    mesh = make_mesh_1d(P)
+    srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
+    B = srcs.shape[1]
+    fn = _build_refine_fn(mesh, P, k, shards.n_loc, shards.n_ghost, B,
+                          num_iterations, use_grid)
+    part_pad = np.concatenate([part.astype(np.int64), [k]])  # sentinel gid=n
+    part_loc = part_pad[np.minimum(shards.local_gid, n)].astype(np.int32)
+    part_ghost = part_pad[np.minimum(shards.ghost_gid, n)].astype(np.int32)
+    salts = (np.arange(num_iterations * B, dtype=np.uint64).reshape(
+        num_iterations, B) * 0xC2B2AE35 + seed * 2654435761) % (2**32)
+    lmax32 = np.minimum(l_max_vec, int(_BIG)).astype(np.int32)
+    lab = fn(jnp.asarray(srcs), jnp.asarray(dsts), jnp.asarray(ws),
+             jnp.asarray(shards.vweights), jnp.asarray(part_loc),
+             jnp.asarray(part_ghost), jnp.asarray(shards.send_idx),
+             jnp.asarray(shards.recv_slot),
+             jnp.asarray(salts.astype(np.uint32)), jnp.asarray(lmax32))
+    lab = np.asarray(lab)
+    out = np.empty(n, dtype=np.int64)
+    valid = shards.local_gid < n
+    out[shards.local_gid[valid]] = lab[valid]
+    return out

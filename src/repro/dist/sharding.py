@@ -1,0 +1,132 @@
+"""Named-axis sharding rules: logical parameter/activation axes -> mesh axes.
+
+Every model declares *logical* axes on its ``ParamSpec``s and activation
+constraints ('batch', 'embed', 'mlp', ...). This module owns the single
+mapping from those names to physical mesh axes ('data', 'model', ...),
+with a hard invariant: **the planner never produces an invalid sharding**
+— a dim that is not divisible by its mesh axis, or a mesh axis used twice
+in one spec, silently falls back to replication for that dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# logical axis -> mesh axis (or tuple of mesh axes). Axes absent from the
+# map (or mapped to None) replicate. 'embed' stays replicated on purpose:
+# it co-occurs with 'mlp'/'heads'/'vocab' in every matmul param, and those
+# carry the model-parallel split.
+DEFAULT_RULES: Dict[str, Any] = {
+    # data-parallel activation axes
+    "batch": "data",
+    "nodes": "data",
+    "edges": "data",
+    # model-parallel (tensor) axes
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "table": "model",
+    # sequence / feature / stacked-layer axes replicate by default
+    "seq": None,
+    "act_seq": None,
+    "feat": None,
+    "embed": None,
+    "head_dim": None,
+    "table_dim": None,
+    "stack": None,
+}
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_axes(shape: Sequence[int],
+                 axes: Sequence[Optional[str]],
+                 mesh: Mesh,
+                 rules: Mapping[str, Any] = DEFAULT_RULES) -> PS:
+    """Map logical ``axes`` of an array of ``shape`` to a PartitionSpec.
+
+    Falls back to replication per-dim whenever the rule's mesh axis is
+    absent from the mesh, already consumed by an earlier dim, trivial
+    (size 1), or does not divide the dim.
+    """
+    sizes = _mesh_sizes(mesh)
+    used: set = set()
+    spec = []
+    for dim, logical in zip(shape, axes):
+        target = rules.get(logical) if logical is not None else None
+        if target is None:
+            spec.append(None)
+            continue
+        names: Tuple[str, ...] = (target,) if isinstance(target, str) \
+            else tuple(target)
+        prod = 1
+        ok = True
+        for nm in names:
+            if nm not in sizes or nm in used or sizes[nm] <= 1:
+                ok = False
+                break
+            prod *= sizes[nm]
+        if not ok or prod <= 1 or dim % prod != 0:
+            spec.append(None)
+            continue
+        used.update(names)
+        spec.append(names[0] if len(names) == 1 else names)
+    return PS(*spec)
+
+
+def spec_shardings(specs, mesh: Mesh,
+                   rules: Mapping[str, Any] = DEFAULT_RULES):
+    """ParamSpec tree -> NamedSharding tree (same structure)."""
+    from ..models.common import is_spec
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, resolve_axes(s.shape, s.axes, mesh,
+                                                   rules)),
+        specs, is_leaf=is_spec)
+
+
+class ShardCtx:
+    """Sharding context threaded through model forward passes.
+
+    ``constrain(x, *logical_axes)`` annotates intermediate activations so
+    GSPMD keeps them distributed; with no mesh (``NULL_CTX``) every call
+    is the identity, so models run unmodified on a single device.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 rules: Mapping[str, Any] = DEFAULT_RULES):
+        self.mesh = mesh
+        self.rules = rules
+
+    def constrain(self, x, *axes: Optional[str]):
+        if self.mesh is None:
+            return x
+        spec = resolve_axes(x.shape, axes, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def data_groups(self) -> int:
+        """Number of shards along the data-parallel axis (>= 1) — the
+        group count for group-local MoE dispatch."""
+        if self.mesh is None:
+            return 1
+        target = self.rules.get("batch")
+        if target is None:
+            return 1
+        names = (target,) if isinstance(target, str) else tuple(target)
+        sizes = _mesh_sizes(self.mesh)
+        g = 1
+        for nm in names:
+            g *= sizes.get(nm, 1)
+        return max(1, g)
+
+    def __repr__(self) -> str:
+        return f"ShardCtx(mesh={None if self.mesh is None else self.mesh.axis_names})"
+
+
+NULL_CTX = ShardCtx(None)

@@ -2,7 +2,7 @@
 this module never touches jax device state)."""
 from __future__ import annotations
 
-import jax
+from ..dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -10,13 +10,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     leading 'pod' axis (2 pods = 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(p: int):
-    """1D 'pe' mesh over p local (or forced-host) devices — used by the
-    distributed partitioner and its tests."""
-    return jax.make_mesh((p,), ("pe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    """1D 'pe' mesh over p local (or forced-host) devices — alias of the
+    mesh the distributed partitioner builds internally."""
+    from ..dist.dist_lp import make_mesh_1d
+    return make_mesh_1d(p)

@@ -19,7 +19,7 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
-                             "partition", "refine"])
+                             "partition", "refine", "smoke"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -35,7 +35,9 @@ def main() -> int:
     from jax.sharding import PartitionSpec as PS
 
     from repro.core import PartitionerConfig, metrics, partition
-    from repro.dist.collectives import direct_all_to_all, grid_all_to_all
+    from repro.dist.collectives import (direct_all_to_all, grid_all_to_all,
+                                        halo_exchange)
+    from repro.dist.compat import shard_map
     from repro.dist.dist_lp import dist_cluster, make_mesh_1d
     from repro.dist.dist_partitioner import (dist_partition,
                                              dist_refine_and_balance)
@@ -56,14 +58,14 @@ def main() -> int:
                             num_chunks=4)
     g = generators.make(args.family, args.n, 8.0, seed=5)
 
-    if args.test in ("all", "collectives"):
+    if args.test in ("all", "collectives", "smoke"):
         mesh = make_mesh_1d(P)
         rng = np.random.default_rng(0)
         slab = rng.integers(0, 1000, size=(P, P, 3)).astype(np.int32)
 
         def run(fn):
-            f = jax.shard_map(lambda s: fn(s[0])[None], mesh=mesh,
-                              in_specs=PS("pe"), out_specs=PS("pe"))
+            f = shard_map(lambda s: fn(s[0])[None], mesh=mesh,
+                          in_specs=PS("pe"), out_specs=PS("pe"))
             return np.asarray(jax.jit(f)(jnp.asarray(slab)))
 
         out_direct = run(lambda s: direct_all_to_all(s, "pe"))
@@ -72,6 +74,37 @@ def main() -> int:
         want = np.swapaxes(slab, 0, 1)
         report("collectives.direct", np.array_equal(out_direct, want))
         report("collectives.grid", np.array_equal(out_grid, want))
+
+    if args.test in ("all", "halo", "smoke"):
+        mesh = make_mesh_1d(P)
+        shards = distribute_graph(g, P)
+        n, n_loc, n_ghost = g.n, shards.n_loc, shards.n_ghost
+        # per-vertex payload: an injective hash of the global id, so a
+        # wrong routing cannot collide into a false pass
+        f_gid = lambda x: ((x.astype(np.int64) * 40503 + 7) % 65521) \
+            .astype(np.int32)
+        vals = np.where(shards.local_gid < n, f_gid(shards.local_gid), 0)
+
+        def run_halo(use_grid):
+            fn = shard_map(
+                lambda v, si, rs: halo_exchange(
+                    v[0], si[0], rs[0], n_ghost, "pe", P,
+                    use_grid=use_grid)[None],
+                mesh=mesh, in_specs=(PS("pe"),) * 3, out_specs=PS("pe"))
+            return np.asarray(jax.jit(fn)(
+                jnp.asarray(vals), jnp.asarray(shards.send_idx),
+                jnp.asarray(shards.recv_slot)))
+
+        got_d = run_halo(False)
+        got_g = run_halo(True)
+        valid = shards.ghost_gid < n
+        want_ghost = f_gid(np.where(valid, shards.ghost_gid, 0))
+        ok_d = np.array_equal(got_d[valid], want_ghost[valid])
+        ok_g = np.array_equal(got_g[valid], want_ghost[valid])
+        report("halo.direct", ok_d, ghosts=int(valid.sum()),
+               payload_bytes=shards.comm_bytes_per_halo())
+        report("halo.grid_vs_direct", ok_g and
+               np.array_equal(got_d, got_g))
 
     if args.test in ("all", "cluster"):
         from repro.core.coarsening import enforce_cluster_weights

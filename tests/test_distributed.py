@@ -27,6 +27,31 @@ def run_selftest(*extra):
     return lines
 
 
+def test_smoke_2dev():
+    """Fast (non-slow) smoke: collectives round-trip + GraphShards halo
+    exchange on 2 forced devices — tier-1 exercises the repro.dist import
+    path and both all-to-all variants on every run."""
+    res = run_selftest("--devices", "2", "--n", "500", "--test", "smoke")
+    assert len(res) == 4, res
+    assert all(r["pass"] for r in res), res
+
+
+def test_grid_collectives_4dev():
+    """Fast (non-slow) grid coverage: at P=2 the grid degenerates to the
+    direct exchange, so tier-1 also runs P=4 (a genuine 2x2 grid) to keep
+    the two-phase routing honest on every run."""
+    res = run_selftest("--devices", "4", "--test", "collectives")
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_halo_8dev():
+    """Ghost-vertex exchange must reproduce the single-process graph's
+    neighbor values for every ghost slot, via direct and grid routing."""
+    res = run_selftest("--devices", "8", "--test", "halo", "--n", "3000")
+    assert all(r["pass"] for r in res), res
+
+
 @pytest.mark.slow
 def test_collectives_8dev():
     res = run_selftest("--devices", "8", "--test", "collectives")
