@@ -1,0 +1,46 @@
+"""Facade benchmark: one request, every backend, one JSON artifact.
+
+Runs the same ``PartitionRequest`` against each registered backend via
+``repro.api.Partitioner.compare`` and writes ``BENCH_api.json`` —
+{backend: {cut, feasible, time_s}} plus instance metadata — so the perf
+trajectory of the public API is tracked run-over-run. The distributed
+backends run at P=1 in-process (a sharding smoke; multi-device numbers
+come from the scaling section's subprocesses).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from .common import bench_config, emit
+
+BACKENDS = ["single", "dist", "dist-grid", "plain_mgp", "single_level_lp"]
+
+
+def run(fast: bool = True, out_json: str = "BENCH_api.json") -> Dict:
+    from repro.api import GraphSpec, PartitionRequest, Partitioner
+
+    n = 4000 if fast else 20000
+    spec = GraphSpec("rgg2d", n, 8.0, seed=17)
+    req = PartitionRequest(graph=spec, k=16, epsilon=0.03,
+                           config=bench_config(), devices=1,
+                           collect_trace=False)
+    result = {"instance": {"family": spec.family, "n": spec.n,
+                           "avg_deg": spec.avg_deg, "seed": spec.seed,
+                           "k": req.k, "epsilon": req.epsilon},
+              "backends": {}}
+    for res in Partitioner().compare(req, BACKENDS):
+        rec = {"cut": res.cut, "feasible": res.feasible,
+               "time_s": round(float(res.time_s), 4)}
+        result["backends"][res.backend] = rec
+        emit(f"api/{res.backend}", res.time_s,
+             f"cut={res.cut};feas={res.feasible}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(result, f, indent=1)
+        emit("api/artifact", 0.0, out_json)
+    return result
+
+
+if __name__ == "__main__":
+    run(fast=True)

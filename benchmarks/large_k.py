@@ -6,38 +6,43 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from typing import Dict
 
 import numpy as np
 
-from repro.core import baselines, metrics, partition
 from repro.core.deep_mgp import PartitionerConfig
 
 from .common import emit, geomean, instance_set
 
 
 def run(scale: str = "small", ks=(64, 256, 1024), out_json=None) -> Dict:
+    from repro.api import PartitionRequest, Partitioner
     # small C so that n/C supports large k (paper: C=2000 at n=2^26+)
     cfg = PartitionerConfig(contraction_limit=32, ip_repetitions=1,
                             num_chunks=4)
+    engine = Partitioner()
     rows = []
     for name, g in instance_set(scale):
         for k in ks:
             if k * 4 > g.n:
                 continue
             rec = {"instance": name, "k": k, "algos": {}}
-            for aname, fn in {
-                "deep": lambda: partition(g, k, config=cfg),
-                "plain": lambda: baselines.plain_mgp(
-                    g, k, cfg=dataclasses.replace(cfg, contraction_limit=8)),
-                "single_lp": lambda: baselines.single_level_lp(g, k),
+            base = PartitionRequest(graph=g, k=k, config=cfg,
+                                    collect_trace=False)
+            for aname, req in {
+                "deep": dataclasses.replace(base, backend="single"),
+                # plain MGP's coarsest graph is C*k vertices — shrink C
+                # further so the baseline stays runnable at large k
+                "plain": dataclasses.replace(
+                    base, backend="plain_mgp",
+                    config=dataclasses.replace(cfg, contraction_limit=8)),
+                "single_lp": dataclasses.replace(
+                    base, backend="single_level_lp"),
             }.items():
-                t0 = time.perf_counter()
-                part = fn()
-                dt = time.perf_counter() - t0
-                s = metrics.summarize(g, part, k, 0.03)
-                rec["algos"][aname] = {"cut": s["cut"], "time": dt,
+                res = engine.run(req)
+                s = res.metrics
+                rec["algos"][aname] = {"cut": s["cut"],
+                                       "time": float(res.time_s),
                                        "feasible": s["feasible"],
                                        "imbalance": s["imbalance"],
                                        "nonempty": s["nonempty_blocks"]}

@@ -7,44 +7,39 @@ single-level LP cuts are >= 2x worse on average; deep ~ plain at small k.
 from __future__ import annotations
 
 import json
-import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
-from repro.core import baselines, metrics, partition
-from repro.core.partitioner import strong_config
+from .common import bench_config, emit, geomean, instance_set
 
-from .common import bench_config, emit, geomean, instance_set, timed
+# facade backend -> the paper's algorithm label
+ALGOS = {"single": "deep", "plain_mgp": "plain",
+         "single_level_lp": "single_lp"}
 
 
 def run(scale: str = "small", ks=(2, 8, 32), seeds=(0, 1), out_json=None
         ) -> Dict:
-    cfg = bench_config()
-    algos = {
-        "deep": lambda g, k, s: partition(
-            g, k, config=_with_seed(bench_config(), s)),
-        "plain": lambda g, k, s: baselines.plain_mgp(
-            g, k, cfg=_with_seed(bench_config(), s)),
-        "single_lp": lambda g, k, s: baselines.single_level_lp(
-            g, k, seed=s),
-    }
+    from repro.api import PartitionRequest, Partitioner
+    engine = Partitioner()
     rows = []
     for name, g in instance_set(scale):
         for k in ks:
-            per_algo = {}
-            for aname, fn in algos.items():
-                cuts, times, feas = [], [], []
-                for s in seeds:
-                    t0 = time.perf_counter()
-                    part = fn(g, k, s)
-                    times.append(time.perf_counter() - t0)
-                    cuts.append(metrics.edge_cut(g, part))
-                    feas.append(metrics.is_feasible(g, part, k, 0.03))
-                per_algo[aname] = {
-                    "cut": float(np.mean(cuts)),
-                    "time": float(np.mean(times)),
-                    "feasible": all(feas)}
+            per_algo = {a: {"cuts": [], "times": [], "feas": []}
+                        for a in ALGOS.values()}
+            for s in seeds:
+                req = PartitionRequest(
+                    graph=g, k=k, config=_with_seed(bench_config(), s),
+                    seed=s, collect_trace=False)
+                for res in engine.compare(req, list(ALGOS)):
+                    acc = per_algo[ALGOS[res.backend]]
+                    acc["cuts"].append(res.cut)
+                    acc["times"].append(res.time_s)
+                    acc["feas"].append(res.feasible)
+            per_algo = {a: {"cut": float(np.mean(acc["cuts"])),
+                            "time": float(np.mean(acc["times"])),
+                            "feasible": all(acc["feas"])}
+                        for a, acc in per_algo.items()}
             rows.append({"instance": name, "k": k, "algos": per_algo})
             emit(f"quality/{name}/k{k}/deep",
                  per_algo["deep"]["time"],
@@ -53,7 +48,7 @@ def run(scale: str = "small", ks=(2, 8, 32), seeds=(0, 1), out_json=None
 
     # performance profile + aggregates
     profile = {}
-    for a in algos:
+    for a in ALGOS.values():
         ratios = []
         for r in rows:
             best = min(v["cut"] for v in r["algos"].values() if v["cut"] >= 0)

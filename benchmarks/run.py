@@ -3,6 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
 Sections:
+  api            — repro.api facade: every backend on one request,
+                   emits BENCH_api.json (cut/feasibility/time per backend)
   quality        — Fig 2a/b: deep vs plain vs single-level LP edge cuts
   large_k        — Table 2: feasibility at large k
   balancer       — §4 Balancing: repair of adversarial imbalance
@@ -22,12 +24,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smallest instances (CI mode)")
-    ap.add_argument("--sections", default="quality,large_k,balancer,"
+    ap.add_argument("--sections", default="api,quality,large_k,balancer,"
                     "kernels,scaling")
     args = ap.parse_args()
     sections = args.sections.split(",")
     print("name,us_per_call,derived")
 
+    if "api" in sections:
+        from . import api_bench
+        api_bench.run(fast=args.fast)
     if "quality" in sections:
         from . import quality
         quality.run(scale="small", ks=(2, 8, 32),

@@ -19,30 +19,30 @@ from typing import Dict
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _CHILD = r"""
-import json, os, sys, time
-import numpy as np
+import json, sys
 P = int(sys.argv[1]); mode = sys.argv[2]; n = int(sys.argv[3])
 k = int(sys.argv[4])
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           f" --xla_force_host_platform_device_count={P}")
-from repro.core import PartitionerConfig, metrics
-from repro.dist.dist_partitioner import dist_partition
+from repro.api import runtime
+runtime.force_host_devices(P)
+from repro.api import PartitionRequest, Partitioner
+from repro.core import PartitionerConfig
 from repro.graphs import generators
 from repro.graphs.distribute import distribute_graph
 cfg = PartitionerConfig(contraction_limit=128, ip_repetitions=1,
                         num_chunks=4)
 g = generators.make("rgg2d", n, 8.0, seed=23)
 shards = distribute_graph(g, P)
-t0 = time.perf_counter()
-part = dist_partition(g, k, P, cfg=cfg)
-dt = time.perf_counter() - t0
+res = Partitioner().run(PartitionRequest(
+    graph=g, k=k, config=cfg, backend="dist-grid", devices=P,
+    collect_trace=False))
 print(json.dumps({
     "P": P, "mode": mode, "n": g.n, "m": g.m, "k": k,
-    "time_s": dt, "cut": metrics.edge_cut(g, part),
-    "feasible": metrics.is_feasible(g, part, k, 0.03),
+    "time_s": res.time_s, "cut": res.cut,
+    "feasible": res.feasible,
+    "backend": res.backend,
     "halo_bytes_total": shards.comm_bytes_per_halo(),
     "halo_bytes_per_pe": shards.comm_bytes_per_halo() / P,
-    "edges_per_s": g.m / dt,
+    "edges_per_s": g.m / res.time_s,
 }))
 """
 

@@ -1,29 +1,32 @@
-"""End-to-end driver (the paper's kind of system): generate a large
-graph, partition it with both presets, validate feasibility, report
-throughput — the Figure 2 experiment in miniature.
+"""End-to-end driver (the paper's kind of system): generate large graphs,
+partition them with both presets through a batched `repro.api` session,
+validate feasibility, report throughput — the Figure 2 experiment in
+miniature.
 
     PYTHONPATH=src python examples/partition_end_to_end.py [n]
 """
 import sys
-import time
 
-import numpy as np
-
-from repro.core import partition
-from repro.core.partitioner import fast_config, strong_config
-from repro.core.metrics import summarize
-from repro.graphs import generators
+from repro.api import GraphSpec, PartitionRequest, PartitionSession
 
 n = int(sys.argv[1]) if len(sys.argv) > 1 else 50000
-for family in ("rgg2d", "rhg"):
-    g = generators.make(family, n, 8.0, seed=1)
-    for preset, cfg in (("fast", fast_config()),
-                        ("strong", strong_config())):
-        t0 = time.time()
-        part = partition(g, 16, config=cfg)
-        dt = time.time() - t0
-        s = summarize(g, part, 16, 0.03)
-        print(f"{family:6s} dKaMinPar-{preset:6s} cut={s['cut']:8d} "
-              f"feasible={s['feasible']} imb={s['imbalance']:.4f} "
-              f"time={dt:5.1f}s ({g.m / dt / 1e6:.2f} M arcs/s)")
-        assert s["feasible"]
+
+# one session serves all (family x preset) requests; independent jobs run
+# concurrently and GraphSpec graphs are materialized once per family
+requests = [
+    PartitionRequest(graph=GraphSpec(family, n, 8.0, seed=1), k=16,
+                     epsilon=0.03, preset=preset, backend="single")
+    for family in ("rgg2d", "rhg")
+    for preset in ("fast", "strong")
+]
+with PartitionSession(max_workers=2) as sess:
+    results = sess.run_batch(requests)
+    print("session:", sess.stats())
+
+for req, res in zip(requests, results):
+    s = res.metrics
+    print(f"{req.graph.family:6s} dKaMinPar-{req.preset:6s} "
+          f"cut={s['cut']:8d} feasible={s['feasible']} "
+          f"imb={s['imbalance']:.4f} time={res.time_s:5.1f}s "
+          f"({s['m'] / res.time_s / 1e6:.2f} M arcs/s)")
+    assert res.feasible

@@ -1,22 +1,29 @@
-"""Quickstart: partition a graph with dKaMinPar-JAX and inspect quality.
+"""Quickstart: partition a graph through the `repro.api` facade and
+inspect quality.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [n]
 """
-import numpy as np
+import sys
 
-from repro.core import partition
-from repro.core.metrics import summarize
-from repro.core.baselines import single_level_lp
-from repro.graphs import generators
+from repro.api import GraphSpec, PartitionRequest, Partitioner
 
-# 1. make (or load) a graph — here: random geometric, 20k vertices
-g = generators.make("rgg2d", 20000, 8.0, seed=0)
-print(f"graph: n={g.n} m={g.m}")
+n = int(sys.argv[1]) if len(sys.argv) > 1 else 20000
 
-# 2. partition into 16 blocks, 3% imbalance (paper defaults)
-part = partition(g, k=16, epsilon=0.03, seed=0)
-print("deep MGP:   ", summarize(g, part, 16, 0.03))
+# 1. describe the job: graph (generated here; pass a Graph to reuse one),
+#    block count, balance slack — paper defaults
+req = PartitionRequest(graph=GraphSpec("rgg2d", n, 8.0, seed=0),
+                       k=16, epsilon=0.03, seed=0)
 
-# 3. compare against single-level label propagation (XtraPuLP-like)
-flat = single_level_lp(g, 16)
-print("single-level:", summarize(g, flat, 16, 0.03))
+# 2. run it; the auto policy picks the single-process backend at 1 device
+engine = Partitioner()
+res = engine.run(req)
+print(f"graph: n={res.metrics['n']} m={res.metrics['m']}")
+print("deep MGP:    ", res.summary())
+for rec in res.trace:  # per-level sizes/cuts/timings
+    print("   ", rec)
+
+# 3. compare against single-level label propagation (XtraPuLP-like) by
+#    running the *same request* on the baseline backend
+flat, = engine.compare(req, ["single_level_lp"])
+print("single-level:", flat.summary())
+assert res.feasible and res.cut < flat.cut

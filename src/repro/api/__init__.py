@@ -1,0 +1,54 @@
+"""Unified partitioning facade — the one public surface of the repo.
+
+dKaMinPar's promise is a single robust entrypoint from 1 to 8192 PEs
+(paper §1). This package is that entrypoint for the reproduction:
+
+    from repro.api import GraphSpec, PartitionRequest, Partitioner
+
+    req = PartitionRequest(graph=GraphSpec("rgg2d", 20000), k=16,
+                           epsilon=0.03, backend="auto", devices=8)
+    res = Partitioner().run(req)
+    res.assignment, res.feasible, res.metrics, res.trace
+
+Backends ("single", "dist", "dist-grid", plus the paper's baselines
+"plain_mgp" / "single_level_lp") live in a string-keyed registry;
+``PartitionSession`` serves batches of requests over one shared mesh.
+``repro.api.runtime.force_host_devices`` is the one sanctioned way to
+force a CPU device count.
+
+Exports resolve lazily (PEP 562) so that importing ``repro.api`` — in
+particular ``repro.api.runtime`` from a CLI, before device setup — never
+drags in jax-heavy modules.
+"""
+from importlib import import_module
+
+_EXPORTS = {
+    "GraphSpec": ".request",
+    "PartitionRequest": ".request",
+    "PartitionResult": ".result",
+    "Partitioner": ".partitioner",
+    "partition": ".partitioner",
+    "PartitionSession": ".session",
+    "BackendContext": ".backends",
+    "register_backend": ".backends",
+    "available_backends": ".backends",
+    "get_backend": ".backends",
+    "resolve_backend": ".backends",
+}
+
+__all__ = sorted(_EXPORTS) + ["runtime"]
+
+
+def __getattr__(name):
+    if name == "runtime":
+        return import_module(".runtime", __name__)
+    try:
+        mod = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(import_module(mod, __name__), name)
+
+
+def __dir__():
+    return __all__

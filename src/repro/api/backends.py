@@ -1,0 +1,121 @@
+"""String-keyed backend registry for the partitioning facade.
+
+A backend is a callable ``(g, req, ctx) -> assignment`` where ``ctx`` is
+a ``BackendContext`` carrying the resolved device count, an optional
+pre-built 1D 'pe' mesh (serving sessions reuse one across requests), and
+an optional trace list the driver appends per-level records to.
+
+Built-ins:
+
+  * ``single``          — single-process deep MGP (``core.deep_mgp``)
+  * ``dist``            — distributed deep MGP, direct all-to-all
+  * ``dist-grid``       — distributed deep MGP, two-level grid routing
+  * ``plain_mgp``       — classic multilevel baseline
+  * ``single_level_lp`` — XtraPuLP-like single-level LP baseline
+
+The baselines being ordinary backends is what makes ``--compare`` "run
+the same request against N backends" instead of bespoke glue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core import baselines
+from ..core.deep_mgp import partition as _single_partition
+from ..graphs.format import Graph
+
+BackendFn = Callable[..., np.ndarray]
+
+_REGISTRY: Dict[str, BackendFn] = {}
+
+# below this many vertices per PE, sharding overhead dominates and the
+# auto policy stays single-process (mirrors the driver's own 2*P floor)
+MIN_VERTICES_PER_DEVICE = 64
+# grid all-to-all routing pays off once the PE count is large (paper §5)
+GRID_ROUTING_MIN_DEVICES = 16
+
+
+def register_backend(name: str, fn: Optional[BackendFn] = None):
+    """Register ``fn`` under ``name``; usable as a decorator."""
+    def _do(f: BackendFn) -> BackendFn:
+        if not name or not isinstance(name, str):
+            raise ValueError(f"backend name must be a non-empty str, "
+                             f"got {name!r}")
+        _REGISTRY[name] = f
+        return f
+    return _do(fn) if fn is not None else _do
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; available: "
+                         f"{available_backends()}") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+@dataclasses.dataclass
+class BackendContext:
+    """Per-run state the facade/session threads into a backend."""
+    devices: int = 1
+    mesh: object = None                 # pre-built 1D 'pe' mesh or None
+    trace: Optional[list] = None
+
+
+def resolve_backend(req, n_graph_vertices: int) -> str:
+    """The ``auto`` policy: distributed iff the caller asked for more
+    than one device AND the graph is big enough to shard; grid routing
+    once the PE count is large. Pure function of the request — never
+    initializes jax."""
+    if req.backend != "auto":
+        return req.backend
+    P = req.devices
+    if P > 1 and n_graph_vertices >= MIN_VERTICES_PER_DEVICE * P:
+        return "dist-grid" if P >= GRID_ROUTING_MIN_DEVICES else "dist"
+    return "single"
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+@register_backend("single")
+def _single(g: Graph, req, ctx: BackendContext) -> np.ndarray:
+    return _single_partition(g, req.k, req.resolve_config(),
+                             trace=ctx.trace)
+
+
+def _dist(g: Graph, req, ctx: BackendContext,
+          use_grid: bool) -> np.ndarray:
+    from ..dist.dist_partitioner import dist_partition_impl
+    return dist_partition_impl(g, req.k, max(1, ctx.devices),
+                               cfg=req.resolve_config(), use_grid=use_grid,
+                               mesh=ctx.mesh, trace=ctx.trace)
+
+
+@register_backend("dist")
+def _dist_direct(g: Graph, req, ctx: BackendContext) -> np.ndarray:
+    return _dist(g, req, ctx, use_grid=False)
+
+
+@register_backend("dist-grid")
+def _dist_grid(g: Graph, req, ctx: BackendContext) -> np.ndarray:
+    return _dist(g, req, ctx, use_grid=True)
+
+
+@register_backend("plain_mgp")
+def _plain_mgp(g: Graph, req, ctx: BackendContext) -> np.ndarray:
+    return baselines.plain_mgp(g, req.k, cfg=req.resolve_config())
+
+
+@register_backend("single_level_lp")
+def _single_level_lp(g: Graph, req, ctx: BackendContext) -> np.ndarray:
+    return baselines.single_level_lp(g, req.k, eps=req.epsilon,
+                                     seed=req.seed)

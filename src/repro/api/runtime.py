@@ -1,0 +1,58 @@
+"""Runtime/device helpers for the partitioning facade.
+
+Deliberately free of ``jax``/``repro`` imports at module level: CLIs call
+``force_host_devices`` *before* anything that could initialize a jax
+backend, and importing this module must never be the thing that does it.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def jax_backend_initialized() -> bool:
+    """True iff a jax backend has been created in this process (at which
+    point the device count is locked and XLA_FLAGS edits are ignored)."""
+    xb = sys.modules.get("jax._src.xla_bridge")
+    if xb is None:
+        return False
+    if hasattr(xb, "_backends"):        # jax 0.4.x: dict filled at init
+        return bool(xb._backends)
+    # private layout changed (newer jax): report initialized so that
+    # force_host_devices fails loudly instead of silently editing flags
+    # that may never be read
+    return True
+
+
+def device_count() -> int:
+    """Devices visible to jax (initializes the backend on first call)."""
+    import jax
+    return len(jax.devices())
+
+
+def force_host_devices(n: int) -> None:
+    """Force ``n`` host (CPU) devices via XLA_FLAGS.
+
+    Safe to call multiple times; replaces any earlier count in the flag.
+    If jax is already *initialized* this cannot take effect any more:
+    the call is a no-op when enough devices exist, and raises a clear
+    ``RuntimeError`` otherwise (instead of the old silent reliance on
+    import order).
+    """
+    if n <= 0:
+        return
+    if jax_backend_initialized():
+        have = device_count()
+        if have >= n:
+            return
+        raise RuntimeError(
+            f"cannot force {n} host devices: jax is already initialized "
+            f"with {have} device(s). Call force_host_devices() before any "
+            "jax computation (e.g. first thing in main()), or run in a "
+            "fresh subprocess.")
+    kept = [t for t in os.environ.get("XLA_FLAGS", "").split()
+            if not t.startswith(_FLAG)]
+    kept.append(f"{_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(kept)

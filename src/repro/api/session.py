@@ -1,0 +1,140 @@
+"""Batched serving sessions: one mesh/ShardCtx, many requests.
+
+``PartitionSession`` is the serving-shaped workload from the ROADMAP: it
+amortizes per-process state (the 1D 'pe' device mesh, the ShardCtx the
+model layers consume, materialized ``GraphSpec`` graphs) across a stream
+of requests and runs independent requests concurrently on a thread pool.
+Results are bit-identical to running each request alone through
+``Partitioner`` — every request is a pure function of its fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Iterable, List, Optional
+
+from .backends import BackendContext, resolve_backend
+from .partitioner import Partitioner
+from .request import GraphSpec, PartitionRequest
+from .result import PartitionResult
+
+
+class PartitionSession:
+    """Serve batches of ``PartitionRequest``s against shared device state.
+
+    Parameters
+    ----------
+    devices:
+        PE count the session's shared mesh is built for (once, lazily,
+        on the first distributed request at that count). Requests keep
+        their own ``devices`` field — one at a different count simply
+        runs without the shared mesh, exactly as a solo run would.
+    backend:
+        Optional registry name replacing each request's ``"auto"`` hint.
+    max_workers:
+        Thread-pool width for concurrent independent requests. Graph
+        generation and the numpy driver phases overlap; jitted programs
+        serialize on the device, so a small pool is plenty.
+    """
+
+    def __init__(self, devices: int = 1, backend: Optional[str] = None,
+                 max_workers: int = 4):
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        self.devices = devices
+        self._engine = Partitioner(backend=backend)
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="repro-api")
+        self._lock = threading.Lock()
+        self._mesh = None
+        self._shard_ctx = None
+        self._graph_cache: Dict[GraphSpec, object] = {}
+        self._served = 0
+        self._total_time_s = 0.0
+        self._closed = False
+
+    # -- shared state ------------------------------------------------------
+
+    @property
+    def mesh(self):
+        """The session's 1D 'pe' mesh (built on first use; ``None`` for
+        single-device sessions)."""
+        if self.devices <= 1:
+            return None
+        with self._lock:
+            if self._mesh is None:
+                from ..dist.dist_lp import make_mesh_1d
+                self._mesh = make_mesh_1d(self.devices)
+            return self._mesh
+
+    @property
+    def shard_ctx(self):
+        """ShardCtx over the session mesh — the handle model layers use
+        to consume this session's partitions."""
+        if self._shard_ctx is None:
+            from ..dist.sharding import NULL_CTX, ShardCtx
+            mesh = self.mesh
+            self._shard_ctx = NULL_CTX if mesh is None else ShardCtx(mesh)
+        return self._shard_ctx
+
+    def _resolve_graph(self, req: PartitionRequest):
+        """Materialize (and cache) GraphSpec graphs once per session."""
+        if isinstance(req.graph, GraphSpec):
+            with self._lock:
+                g = self._graph_cache.get(req.graph)
+            if g is None:
+                g = req.graph.materialize()
+                with self._lock:
+                    self._graph_cache[req.graph] = g
+            return dataclasses.replace(req, graph=g)
+        return req
+
+    # -- serving -----------------------------------------------------------
+
+    def _run_one(self, req: PartitionRequest) -> PartitionResult:
+        req = self._resolve_graph(req)
+        eff = req
+        if self._engine.backend is not None and req.backend == "auto":
+            eff = dataclasses.replace(req, backend=self._engine.backend)
+        name = resolve_backend(eff, req.graph.n)
+        # the shared mesh only fits requests at the session's PE count;
+        # anything else runs exactly as a solo Partitioner would
+        mesh = self.mesh if (name in ("dist", "dist-grid")
+                             and req.devices == self.devices) else None
+        res = self._engine.run(
+            req, _ctx=BackendContext(devices=req.devices, mesh=mesh))
+        with self._lock:
+            self._served += 1
+            self._total_time_s += res.time_s
+        return res
+
+    def submit(self, req: PartitionRequest) -> "Future[PartitionResult]":
+        """Enqueue one request; returns a future."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        return self._pool.submit(self._run_one, req)
+
+    def run_batch(self, requests: Iterable[PartitionRequest]
+                  ) -> List[PartitionResult]:
+        """Serve a batch concurrently; results in request order."""
+        futures = [self.submit(r) for r in requests]
+        return [f.result() for f in futures]
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {"served": self._served,
+                    "devices": self.devices,
+                    "total_partition_time_s": round(self._total_time_s, 6)}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        self._closed = True
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "PartitionSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

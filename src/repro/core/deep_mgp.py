@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,6 +38,42 @@ class PartitionerConfig:
     max_levels: int = 64
     min_shrink: float = 0.95               # stop coarsening if n_c/n above
     seed: int = 0
+
+    def validate(self) -> "PartitionerConfig":
+        """Reject configurations that would only fail later as opaque
+        shape errors. Returns self so drivers can chain it."""
+        if self.epsilon <= 0:
+            raise ValueError(
+                f"epsilon must be > 0, got {self.epsilon!r} (the balance "
+                "constraint L_max is undefined for non-positive slack)")
+        if self.initial_k < 1:
+            raise ValueError(f"initial_k must be >= 1, got {self.initial_k}")
+        if self.contraction_limit < self.initial_k:
+            raise ValueError(
+                f"contraction_limit ({self.contraction_limit}) must be >= "
+                f"initial_k ({self.initial_k}); the coarsest graph must "
+                "hold at least one vertex per initial block")
+        if self.num_chunks < 1:
+            raise ValueError(
+                f"num_chunks must be >= 1, got {self.num_chunks}")
+        if self.cluster_iterations < 1 or self.refine_iterations < 0:
+            raise ValueError(
+                "cluster_iterations must be >= 1 and refine_iterations "
+                f">= 0, got {self.cluster_iterations}/"
+                f"{self.refine_iterations}")
+        return self
+
+
+def check_k(k: int, where: str = "partition") -> None:
+    """Shared driver guard: k must be a positive block count."""
+    if k < 1:
+        raise ValueError(f"{where}: k must be >= 1, got {k}")
+
+
+def trace_event(trace: Optional[List[Dict]], **record) -> None:
+    """Append one per-level record to ``trace`` (no-op when None)."""
+    if trace is not None:
+        trace.append(record)
 
 
 def ceil2(x: int) -> int:
@@ -118,10 +155,17 @@ def extend_partition(g: Graph, part: np.ndarray, block_k: np.ndarray,
     return part, block_k
 
 
-def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None
-              ) -> np.ndarray:
-    """Deep multilevel k-way partition. Returns block ids (n,)."""
-    cfg = cfg or PartitionerConfig()
+def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
+              trace: Optional[List[Dict]] = None) -> np.ndarray:
+    """Deep multilevel k-way partition. Returns block ids (n,).
+
+    ``trace``, when given, receives one dict per phase/level (sizes, cuts,
+    wall times) — the structured log surfaced by ``repro.api``.
+    """
+    cfg = (cfg or PartitionerConfig()).validate()
+    check_k(k, "deep_mgp.partition")
+    if k == 1 or g.n == 0:
+        return np.zeros(g.n, dtype=np.int64)
     rng = np.random.default_rng(cfg.seed)
     total_c = g.total_vweight
     max_c = int(g.vweights.max()) if g.n else 1
@@ -135,17 +179,22 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None
     while G.n > C * min(k, K) and level < cfg.max_levels:
         kprime = max(1, min(k, G.n // max(1, C)))
         W = max(1, int(cfg.epsilon * total_c / kprime))
+        t0 = time.perf_counter()
         labels = cluster(G, W, num_iterations=cfg.cluster_iterations,
                          num_chunks=cfg.num_chunks, seed=cfg.seed + level)
         Gc, mapping = contract(G, labels)
         log.info("level %d: n=%d -> n_c=%d (W=%d)", level, G.n, Gc.n, W)
         if Gc.n >= G.n * cfg.min_shrink:
             break  # converged — coarsest level reached
+        trace_event(trace, phase="coarsen", level=level, n=G.n, m=G.m,
+                    coarse_n=Gc.n, W=W,
+                    time_s=round(time.perf_counter() - t0, 6))
         hierarchy.append((G, mapping))
         G = Gc
         level += 1
 
     # ---- initial partition of the coarsest graph (base case) -----------
+    t0 = time.perf_counter()
     k0 = max(1, min(k, K))
     counts = distribute_counts(k, k0)
     part = partition_into_counts(G, counts, l_final, rng,
@@ -154,9 +203,15 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None
     part = balance_and_refine(G, part, _l_vec(block_k, l_final),
                               num_iterations=cfg.refine_iterations,
                               num_chunks=cfg.num_chunks, seed=cfg.seed)
+    if trace is not None:
+        trace_event(trace, phase="initial", n=G.n, m=G.m,
+                    blocks=int(block_k.shape[0]),
+                    cut=metrics.edge_cut(G, part),
+                    time_s=round(time.perf_counter() - t0, 6))
 
     # ---- uncoarsening: project, extend, refine (lines 7–9, 13–18) ------
-    for (Gf, mapping) in reversed(hierarchy):
+    for lvl, (Gf, mapping) in enumerate(reversed(hierarchy)):
+        t0 = time.perf_counter()
         part = part[mapping]
         target = min(k, ceil2(max(1, Gf.n // max(1, C))))
         target = max(target, block_k.shape[0])
@@ -166,8 +221,14 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None
                                   num_iterations=cfg.refine_iterations,
                                   num_chunks=cfg.num_chunks,
                                   seed=cfg.seed + Gf.n % 1000003)
+        if trace is not None:
+            trace_event(trace, phase="uncoarsen", level=lvl, n=Gf.n,
+                        m=Gf.m, blocks=int(block_k.shape[0]),
+                        cut=metrics.edge_cut(Gf, part),
+                        time_s=round(time.perf_counter() - t0, 6))
 
     # ---- final extension to exactly k blocks (omitted-case in Alg. 1) --
+    t0 = time.perf_counter()
     part, block_k = extend_partition(g, part, block_k, k, l_final, cfg,
                                      rng, target_blocks=k)
     if block_k.shape[0] < k:  # blocks that cannot split further (tiny n)
@@ -176,4 +237,8 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None
     part = balance_and_refine(g, part, np.full(k, l_final, dtype=np.int64),
                               num_iterations=cfg.refine_iterations,
                               num_chunks=cfg.num_chunks, seed=cfg.seed + 17)
+    if trace is not None:
+        trace_event(trace, phase="final", n=g.n, m=g.m, blocks=k,
+                    cut=metrics.edge_cut(g, part),
+                    time_s=round(time.perf_counter() - t0, 6))
     return part

@@ -1,6 +1,14 @@
-"""Public partitioner API."""
+"""Legacy single-process entrypoint — superseded by ``repro.api``.
+
+``partition`` is kept as a thin deprecation shim; new code should build a
+``repro.api.PartitionRequest`` and run it through ``repro.api.Partitioner``
+(or the ``repro.api.partition`` convenience wrapper). The preset builders
+``fast_config`` / ``strong_config`` remain the canonical way to spell the
+paper's two configurations and are *not* deprecated.
+"""
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -26,22 +34,43 @@ def strong_config(seed: int = 0, **overrides) -> PartitionerConfig:
         "refine_iterations", 3), seed=seed, **overrides)
 
 
+PRESETS = {"fast": fast_config, "strong": strong_config}
+
+
+def resolve_config(preset: str = "fast",
+                   config: Optional[PartitionerConfig] = None,
+                   epsilon: float = 0.03, seed: int = 0
+                   ) -> PartitionerConfig:
+    """One place that turns (preset, explicit config, epsilon, seed) into
+    a validated ``PartitionerConfig`` — an explicit config wins."""
+    if config is not None:
+        return config.validate()
+    try:
+        builder = PRESETS[preset]
+    except KeyError:
+        raise ValueError(f"unknown preset {preset!r}; "
+                         f"expected one of {sorted(PRESETS)}") from None
+    return builder(seed=seed, epsilon=epsilon).validate()
+
+
 def partition(g: Graph, k: int,
               epsilon: float = 0.03,
               config: Optional[PartitionerConfig] = None,
               seed: int = 0) -> np.ndarray:
     """Deep multilevel k-way partition of ``g`` into ``k`` blocks.
 
-    Returns an (n,) int64 array of block ids. The result always satisfies
-    the paper's (relaxed) balance constraint — validated by
-    ``metrics.is_feasible``.
+    .. deprecated:: 0.2
+       Use ``repro.api.partition(g, k, ...)`` (returns a
+       ``PartitionResult`` whose ``.assignment`` is this array).
     """
-    if config is None:
-        config = fast_config(seed=seed, epsilon=epsilon)
+    warnings.warn(
+        "repro.core.partitioner.partition is deprecated; use "
+        "repro.api.partition / repro.api.Partitioner instead",
+        DeprecationWarning, stacklevel=2)
     if k <= 1:
         return np.zeros(g.n, dtype=np.int64)
-    return _partition(g, k, config)
+    return _partition(g, k, resolve_config("fast", config, epsilon, seed))
 
 
-__all__ = ["partition", "fast_config", "strong_config", "PartitionerConfig",
-           "metrics"]
+__all__ = ["partition", "fast_config", "strong_config", "resolve_config",
+           "PRESETS", "PartitionerConfig", "metrics"]

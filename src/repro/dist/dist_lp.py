@@ -54,6 +54,16 @@ def make_mesh_1d(P: int) -> Mesh:
     return Mesh(np.array(devs[:P]), ("pe",))
 
 
+def _resolve_mesh(mesh, P: int) -> Mesh:
+    """Accept a caller-provided 1D 'pe' mesh (serving sessions build one
+    and reuse it across requests) or build a fresh one."""
+    if mesh is None:
+        return make_mesh_1d(P)
+    assert mesh.axis_names == ("pe",) and mesh.devices.size == P, \
+        (mesh.axis_names, mesh.devices.size, P)
+    return mesh
+
+
 # ---------------------------------------------------------------------------
 # per-PE chunk step (jit-side)
 # ---------------------------------------------------------------------------
@@ -218,7 +228,8 @@ def dist_cluster(shards: GraphShards,
                  num_iterations: int = 3,
                  num_chunks: int = 8,
                  seed: int = 0,
-                 use_grid: bool = True) -> np.ndarray:
+                 use_grid: bool = True,
+                 mesh: Mesh = None) -> np.ndarray:
     """Distributed size-constrained LP clustering over graph shards.
 
     Returns (n,) int64 global cluster labels (label values are vertex
@@ -228,7 +239,7 @@ def dist_cluster(shards: GraphShards,
     """
     P, n = shards.P, shards.n
     _check_int32_weights(shards)
-    mesh = make_mesh_1d(P)
+    mesh = _resolve_mesh(mesh, P)
     srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
     B = srcs.shape[1]
     fn = _build_cluster_fn(mesh, P, n, shards.n_loc, shards.n_ghost, B,
@@ -310,7 +321,8 @@ def dist_lp_refine(shards: GraphShards,
                    num_iterations: int = 2,
                    num_chunks: int = 8,
                    seed: int = 0,
-                   use_grid: bool = True) -> np.ndarray:
+                   use_grid: bool = True,
+                   mesh: Mesh = None) -> np.ndarray:
     """Distributed chunked LP refinement of a k-way partition.
 
     Same move rule as ``core.lp._refine_chunk`` (positive gain, or zero
@@ -321,7 +333,7 @@ def dist_lp_refine(shards: GraphShards,
     P, n = shards.P, shards.n
     _check_int32_weights(shards)
     k = int(l_max_vec.shape[0])
-    mesh = make_mesh_1d(P)
+    mesh = _resolve_mesh(mesh, P)
     srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
     B = srcs.shape[1]
     fn = _build_refine_fn(mesh, P, k, shards.n_loc, shards.n_ghost, B,

@@ -6,10 +6,16 @@ PE's budget it delegates to the single-process deep-MGP path (the paper's
 own base case: after log P contractions the coarse graph is gathered and
 partitioned on fewer PEs). Uncoarsening projects through the contraction
 maps and runs distributed refinement + balancing per level.
+
+The public ``dist_partition`` entrypoint is a deprecation shim; new code
+routes through ``repro.api`` (backend names ``"dist"`` / ``"dist-grid"``),
+which calls ``dist_partition_impl`` and can reuse one mesh across requests.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import time
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -17,8 +23,8 @@ from ..core import metrics
 from ..core.balance import rebalance
 from ..core.coarsening import enforce_cluster_weights
 from ..core.contraction import contract
-from ..core.deep_mgp import PartitionerConfig
-from ..core.partitioner import partition as sp_partition
+from ..core.deep_mgp import (PartitionerConfig, check_k,
+                             partition as sp_partition, trace_event)
 from ..graphs.distribute import distribute_graph
 from ..graphs.format import Graph
 from .dist_lp import dist_cluster, dist_lp_refine
@@ -31,7 +37,8 @@ def dist_refine_and_balance(g: Graph,
                             num_iterations: int = 2,
                             num_chunks: int = 8,
                             seed: int = 0,
-                            use_grid: bool = True) -> np.ndarray:
+                            use_grid: bool = True,
+                            mesh=None) -> np.ndarray:
     """Distributed BalanceAndRefine: sharded LP refinement (block weights
     psum-synced, races bounced) followed by the exact global balancer so
     the result always satisfies the per-block budgets."""
@@ -41,24 +48,31 @@ def dist_refine_and_balance(g: Graph,
     part = dist_lp_refine(shards, part, l_max_vec,
                           num_iterations=num_iterations,
                           num_chunks=num_chunks, seed=seed,
-                          use_grid=use_grid)
+                          use_grid=use_grid, mesh=mesh)
     part = rebalance(g, part, l_max_vec, seed=seed + 1)
     return part
 
 
-def dist_partition(g: Graph,
-                   k: int,
-                   P: int,
-                   cfg: Optional[PartitionerConfig] = None,
-                   use_grid: bool = True) -> np.ndarray:
+def dist_partition_impl(g: Graph,
+                        k: int,
+                        P: int,
+                        cfg: Optional[PartitionerConfig] = None,
+                        use_grid: bool = True,
+                        mesh=None,
+                        trace: Optional[List[Dict]] = None) -> np.ndarray:
     """Distributed deep multilevel k-way partition over P PEs.
 
     Returns (n,) int64 block ids satisfying the paper's relaxed balance
     constraint. Matches the single-process reference pipeline except that
-    fine levels cluster and refine under shard_map.
+    fine levels cluster and refine under shard_map. ``mesh`` lets a
+    serving session reuse one 1D 'pe' mesh across requests; ``trace``
+    collects per-level size/cut/timing records.
     """
-    cfg = cfg or PartitionerConfig()
-    if k <= 1 or g.n == 0:
+    cfg = (cfg or PartitionerConfig()).validate()
+    check_k(k, "dist_partition")
+    if P < 1:
+        raise ValueError(f"dist_partition: P must be >= 1, got {P}")
+    if k == 1 or g.n == 0:
         return np.zeros(g.n, dtype=np.int64)
     total_c = g.total_vweight
     l_final = metrics.l_max(total_c, k, cfg.epsilon,
@@ -72,28 +86,59 @@ def dist_partition(g: Graph,
     while G.n > C * min(k, K) and G.n >= 2 * P and level < cfg.max_levels:
         kprime = max(1, min(k, G.n // max(1, C)))
         W = max(1, int(cfg.epsilon * total_c / kprime))
+        t0 = time.perf_counter()
         shards = distribute_graph(G, P)
         labels = dist_cluster(shards, W,
                               num_iterations=cfg.cluster_iterations,
                               num_chunks=cfg.num_chunks,
-                              seed=cfg.seed + level, use_grid=use_grid)
+                              seed=cfg.seed + level, use_grid=use_grid,
+                              mesh=mesh)
         labels = enforce_cluster_weights(labels, np.asarray(G.vweights), W)
         Gc, mapping = contract(G, labels)
         if Gc.n >= G.n * cfg.min_shrink:
             break  # converged — coarsest distributed level reached
+        trace_event(trace, phase="dist-coarsen", level=level, n=G.n, m=G.m,
+                    coarse_n=Gc.n, W=W, P=P,
+                    time_s=round(time.perf_counter() - t0, 6))
         hierarchy.append((G, mapping))
         G = Gc
         level += 1
 
     # ---- base case: single-process deep MGP on the coarse graph --------
-    part = sp_partition(G, k, config=cfg)
+    part = sp_partition(G, k, cfg, trace=trace)
 
     # ---- uncoarsening: project + distributed refine/balance ------------
     lvec = np.full(k, l_final, dtype=np.int64)
-    for (Gf, mapping) in reversed(hierarchy):
+    for lvl, (Gf, mapping) in enumerate(reversed(hierarchy)):
+        t0 = time.perf_counter()
         part = part[mapping]
         part = dist_refine_and_balance(
             Gf, part, lvec, P, num_iterations=cfg.refine_iterations,
             num_chunks=cfg.num_chunks,
-            seed=cfg.seed + Gf.n % 1000003, use_grid=use_grid)
+            seed=cfg.seed + Gf.n % 1000003, use_grid=use_grid, mesh=mesh)
+        if trace is not None:
+            trace_event(trace, phase="dist-uncoarsen", level=lvl, n=Gf.n,
+                        m=Gf.m, blocks=k, P=P,
+                        cut=metrics.edge_cut(Gf, part),
+                        time_s=round(time.perf_counter() - t0, 6))
     return part
+
+
+def dist_partition(g: Graph,
+                   k: int,
+                   P: int,
+                   cfg: Optional[PartitionerConfig] = None,
+                   use_grid: bool = True) -> np.ndarray:
+    """Distributed deep multilevel k-way partition over P PEs.
+
+    .. deprecated:: 0.2
+       Use ``repro.api.Partitioner`` with backend ``"dist"`` (direct
+       all-to-all) or ``"dist-grid"`` (two-level grid routing).
+    """
+    warnings.warn(
+        "repro.dist.dist_partitioner.dist_partition is deprecated; use "
+        "repro.api.Partitioner with backend 'dist' or 'dist-grid'",
+        DeprecationWarning, stacklevel=2)
+    if k <= 1 or g.n == 0:
+        return np.zeros(g.n, dtype=np.int64)
+    return dist_partition_impl(g, k, P, cfg=cfg, use_grid=use_grid)

@@ -1,17 +1,22 @@
-"""Partitioner CLI — the paper's tool as a command.
+"""Partitioner CLI — the paper's tool as a command, on the `repro.api`
+facade.
 
   python -m repro.launch.partition --family rgg2d --n 20000 --k 16
   python -m repro.launch.partition --family rhg --n 10000 --k 64 \
       --preset strong --compare
   python -m repro.launch.partition ... --devices 8      # distributed
+  python -m repro.launch.partition ... --backend dist-grid
+
+Prints one JSON summary line per backend run; exit 0 iff the primary
+run is feasible.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
-import time
+
+COMPARE_BACKENDS = ["plain_mgp", "single_level_lp"]
 
 
 def main() -> int:
@@ -23,46 +28,43 @@ def main() -> int:
     ap.add_argument("--epsilon", type=float, default=0.03)
     ap.add_argument("--preset", default="fast", choices=["fast", "strong"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    help="registry name (single | dist | dist-grid | "
+                         "plain_mgp | single_level_lp) or 'auto'")
     ap.add_argument("--compare", action="store_true",
-                    help="also run plain-MGP and single-level baselines")
+                    help="also run plain-MGP and single-level baselines "
+                         "as backends of the same request")
     ap.add_argument("--devices", type=int, default=0,
-                    help=">0: distributed over forced host devices")
+                    help=">0: force that many host devices (must happen "
+                         "before jax initializes)")
+    ap.add_argument("--trace", action="store_true",
+                    help="also print the per-level trace records")
     args = ap.parse_args()
 
+    # device forcing first — repro.api.runtime errors cleanly if some
+    # earlier import already initialized jax, instead of silently serving
+    # a stale device count.
+    from repro.api import runtime
     if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "") +
-            f" --xla_force_host_platform_device_count={args.devices}")
+        runtime.force_host_devices(args.devices)
 
-    from repro.core import baselines, metrics
-    from repro.core.partitioner import fast_config, partition, strong_config
-    from repro.graphs import generators
+    from repro.api import GraphSpec, PartitionRequest, Partitioner
 
-    g = generators.make(args.family, args.n, args.avg_deg, seed=args.seed)
-    cfg = (strong_config if args.preset == "strong" else fast_config)(
-        seed=args.seed, epsilon=args.epsilon)
-    t0 = time.time()
-    if args.devices:
-        from repro.dist.dist_partitioner import dist_partition
-        part = dist_partition(g, args.k, args.devices, cfg=cfg)
-    else:
-        part = partition(g, args.k, config=cfg)
-    dt = time.time() - t0
-    s = metrics.summarize(g, part, args.k, args.epsilon)
-    s.update({"algo": f"dkaminpar-{args.preset}", "time_s": round(dt, 3),
-              "n": g.n, "m": g.m, "devices": args.devices or 1})
-    print(json.dumps(s))
+    req = PartitionRequest(
+        graph=GraphSpec(args.family, args.n, args.avg_deg, seed=args.seed),
+        k=args.k, epsilon=args.epsilon, preset=args.preset,
+        seed=args.seed, backend=args.backend,
+        devices=args.devices or 1)
+    engine = Partitioner()
+    res = engine.run(req)
+    print(json.dumps(res.summary()))
+    if args.trace:
+        for rec in res.trace:
+            print(json.dumps(rec))
     if args.compare:
-        for name, fn in [
-                ("plain_mgp", lambda: baselines.plain_mgp(g, args.k)),
-                ("single_level_lp",
-                 lambda: baselines.single_level_lp(g, args.k))]:
-            t0 = time.time()
-            p2 = fn()
-            s2 = metrics.summarize(g, p2, args.k, args.epsilon)
-            s2.update({"algo": name, "time_s": round(time.time() - t0, 3)})
-            print(json.dumps(s2))
-    return 0 if s["feasible"] else 1
+        for r in engine.compare(req, COMPARE_BACKENDS):
+            print(json.dumps(r.summary()))
+    return 0 if res.feasible else 1
 
 
 if __name__ == "__main__":

@@ -2,15 +2,17 @@
 
 Usage:  python -m repro.launch.selftest --devices 8 --test all
 
-Sets XLA_FLAGS *before* importing jax (device count locks at first init),
-then validates the distributed implementation against the single-process
-reference: collectives round-trip, distributed clustering validity,
-distributed partition feasibility + quality, grid vs direct all-to-all
-equivalence. Prints one JSON line per test; exit code 0 iff all pass.
+Forces the device count through ``repro.api.runtime`` *before* any jax
+init (the count locks at first backend creation; the helper raises
+instead of silently misconfiguring), then validates the distributed
+implementation against the single-process reference: collectives
+round-trip, distributed clustering validity, distributed partition
+feasibility + quality, grid vs direct all-to-all equivalence, and the
+``repro.api`` facade (old-vs-new equality, batched sessions). Prints one
+JSON line per test; exit code 0 iff all pass.
 """
 import argparse
 import json
-import os
 import sys
 
 
@@ -19,27 +21,27 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
-                             "partition", "refine", "smoke"])
+                             "partition", "refine", "smoke", "api"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
     args = ap.parse_args()
 
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={args.devices}")
+    from repro.api import runtime
+    runtime.force_host_devices(args.devices)
 
     import jax
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as PS
 
-    from repro.core import PartitionerConfig, metrics, partition
+    from repro.core import PartitionerConfig, metrics
+    from repro.core.deep_mgp import partition
     from repro.dist.collectives import (direct_all_to_all, grid_all_to_all,
                                         halo_exchange)
     from repro.dist.compat import shard_map
     from repro.dist.dist_lp import dist_cluster, make_mesh_1d
-    from repro.dist.dist_partitioner import (dist_partition,
+    from repro.dist.dist_partitioner import (dist_partition_impl,
                                              dist_refine_and_balance)
     from repro.graphs import generators
     from repro.graphs.distribute import distribute_graph
@@ -146,14 +148,53 @@ def main() -> int:
                cut_after=cut1, feasible=feas)
 
     if args.test in ("all", "partition"):
-        part = dist_partition(g, args.k, P, cfg=cfg)
+        part = dist_partition_impl(g, args.k, P, cfg=cfg)
         s = metrics.summarize(g, part, args.k, 0.03)
-        ref = partition(g, args.k, config=cfg)
+        ref = partition(g, args.k, cfg)
         cut_ref = metrics.edge_cut(g, ref)
         # distributed quality within 1.5x of the single-process reference
         report("partition.dist", s["feasible"] and
                s["cut"] <= max(1.5 * cut_ref, cut_ref + 50),
                dist=s, ref_cut=cut_ref)
+
+    if args.test in ("all", "api"):
+        from repro.api import (PartitionRequest, Partitioner,
+                               PartitionSession)
+        engine = Partitioner()
+
+        # facade(dist-grid) must reproduce the direct driver bit-exactly
+        req = PartitionRequest(graph=g, k=args.k, config=cfg,
+                               backend="dist-grid", devices=P)
+        res = engine.run(req)
+        want = dist_partition_impl(g, args.k, P, cfg=cfg, use_grid=True)
+        report("api.dist_matches_driver",
+               res.feasible and np.array_equal(res.assignment, want),
+               cut=res.cut, levels=len(res.trace))
+
+        # feasibility flag must agree with the metrics module
+        report("api.feasible_flag",
+               res.feasible == metrics.is_feasible(g, res.assignment,
+                                                   args.k, 0.03))
+
+        # auto policy routes this (large-enough) graph to a dist backend
+        auto = engine.run(PartitionRequest(graph=g, k=args.k, config=cfg,
+                                           backend="auto", devices=P))
+        report("api.auto_backend", auto.backend in ("dist", "dist-grid"),
+               backend=auto.backend)
+
+        # batched session == per-request results, mesh reused across both
+        reqs = [PartitionRequest(graph=g, k=kk, config=cfg, backend="dist",
+                                 devices=P)
+                for kk in (args.k, max(1, args.k // 2))]
+        with PartitionSession(devices=P, max_workers=2) as sess:
+            batch = sess.run_batch(reqs)
+            served = sess.stats()["served"]
+        solo = [engine.run(r) for r in reqs]
+        same = all(np.array_equal(b.assignment, s.assignment)
+                   for b, s in zip(batch, solo))
+        report("api.session_batch", same and served == len(reqs),
+               served=served,
+               cuts=[b.cut for b in batch])
 
     return 0 if ok else 1
 

@@ -9,7 +9,8 @@ from typing import Dict, Tuple
 import numpy as np
 
 from ..core import metrics
-from ..core.partitioner import fast_config, partition
+from ..core.deep_mgp import partition
+from ..core.partitioner import fast_config
 from ..graphs.format import from_coo
 
 
@@ -32,8 +33,8 @@ def plan(sparse_batches: np.ndarray, table_rows: np.ndarray,
          ) -> Dict:
     g = cooccurrence_graph(sparse_batches, table_rows)
     part = partition(g, n_shards,
-                     config=fast_config(seed=seed, epsilon=epsilon,
-                                        contraction_limit=8))
+                     fast_config(seed=seed, epsilon=epsilon,
+                                 contraction_limit=8))
     return {
         "assignment": part,                     # table -> shard
         "cut": metrics.edge_cut(g, part),

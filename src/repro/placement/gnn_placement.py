@@ -10,7 +10,8 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..core import metrics
-from ..core.partitioner import PartitionerConfig, fast_config, partition
+from ..core.deep_mgp import partition
+from ..core.partitioner import PartitionerConfig, fast_config
 from ..graphs.distribute import GraphShards, distribute_graph
 from ..graphs.format import Graph, permute
 
@@ -29,7 +30,7 @@ def plan(g: Graph, n_devices: int,
          config: Optional[PartitionerConfig] = None,
          epsilon: float = 0.03, seed: int = 0) -> GNNPlacement:
     cfg = config or fast_config(seed=seed, epsilon=epsilon)
-    part = partition(g, n_devices, config=cfg)
+    part = partition(g, n_devices, cfg)
     order = np.argsort(part, kind="stable")
     perm = np.empty(g.n, dtype=np.int64)
     perm[order] = np.arange(g.n)

@@ -10,7 +10,8 @@ from typing import Dict
 import numpy as np
 
 from ..core import metrics
-from ..core.partitioner import fast_config, partition
+from ..core.deep_mgp import partition
+from ..core.partitioner import fast_config
 from ..graphs.format import from_coo
 
 
@@ -31,8 +32,8 @@ def plan(topk_samples: np.ndarray, n_experts: int, n_pods: int,
          epsilon: float = 0.0, seed: int = 0) -> Dict:
     g = coactivation_graph(topk_samples, n_experts)
     part = partition(g, n_pods,
-                     config=fast_config(seed=seed, epsilon=max(epsilon, .01),
-                                        contraction_limit=4))
+                     fast_config(seed=seed, epsilon=max(epsilon, .01),
+                                 contraction_limit=4))
     total = int(g.total_eweight) // 2
     cut = metrics.edge_cut(g, part)
     # naive baseline: contiguous expert ranges per pod

@@ -1,0 +1,207 @@
+"""repro.api facade: request/result contract, backend registry, old-vs-new
+equivalence, batched sessions, runtime helpers.
+
+Multi-device facade coverage lives in test_distributed.py (subprocess
+selftest ``--test api``); here the dist backends run at P=1 in-process.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (GraphSpec, PartitionRequest, Partitioner,
+                       PartitionSession, available_backends,
+                       partition as api_partition, register_backend,
+                       resolve_backend, runtime)
+from repro.core import PartitionerConfig, metrics
+from repro.core.deep_mgp import partition as driver_partition
+from repro.graphs import generators
+
+CFG = PartitionerConfig(contraction_limit=128, ip_repetitions=2,
+                        num_chunks=4)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.make("rgg2d", 2000, 8.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def single_result(g):
+    return Partitioner().run(
+        PartitionRequest(graph=g, k=8, config=CFG, backend="single"))
+
+
+# ---------------------------------------------------------------------------
+# registry + auto policy
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    assert {"single", "dist", "dist-grid", "plain_mgp",
+            "single_level_lp"} <= set(available_backends())
+
+
+def test_auto_policy_is_pure():
+    import dataclasses
+    req = PartitionRequest(graph=GraphSpec("rgg2d", 50000), k=16)
+    assert resolve_backend(req, 50000) == "single"          # 1 device
+    assert resolve_backend(
+        dataclasses.replace(req, devices=4), 50000) == "dist"
+    assert resolve_backend(
+        dataclasses.replace(req, devices=16), 50000) == "dist-grid"
+    # too small to shard -> stays single even with devices
+    assert resolve_backend(
+        dataclasses.replace(req, devices=8), 100) == "single"
+    # explicit hint always wins
+    assert resolve_backend(
+        dataclasses.replace(req, backend="plain_mgp", devices=8),
+        50000) == "plain_mgp"
+
+
+def test_register_backend_roundtrip(g):
+    @register_backend("toy-zeros")
+    def _toy(graph, req, ctx):
+        return np.zeros(graph.n, dtype=np.int64)
+    try:
+        res = Partitioner().run(
+            PartitionRequest(graph=g, k=4, config=CFG,
+                             backend="toy-zeros"))
+        assert res.backend == "toy-zeros"
+        assert not res.assignment.any()
+        assert not res.feasible        # everything in one block
+    finally:
+        from repro.api import backends as _b
+        _b._REGISTRY.pop("toy-zeros")
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(k=0), dict(k=-3), dict(epsilon=0.0), dict(epsilon=-1.0),
+    dict(devices=0), dict(preset="turbo"), dict(backend="nope"),
+])
+def test_request_validation_rejects(kw, g):
+    base = dict(graph=g, k=8)
+    base.update(kw)
+    with pytest.raises(ValueError):
+        PartitionRequest(**base).validate()
+
+
+def test_request_validation_unknown_family():
+    with pytest.raises(ValueError):
+        PartitionRequest(graph=GraphSpec("nosuch", 100), k=2).validate()
+
+
+@pytest.mark.parametrize("kw", [
+    dict(epsilon=-0.5), dict(num_chunks=0),
+    dict(contraction_limit=1, initial_k=2), dict(cluster_iterations=0),
+])
+def test_config_validate_rejects(kw):
+    with pytest.raises(ValueError):
+        PartitionerConfig(**kw).validate()
+
+
+def test_driver_rejects_bad_k(g):
+    with pytest.raises(ValueError):
+        driver_partition(g, 0, CFG)
+    from repro.dist.dist_partitioner import dist_partition_impl
+    with pytest.raises(ValueError):
+        dist_partition_impl(g, 0, 1, cfg=CFG)
+    with pytest.raises(ValueError):
+        dist_partition_impl(g, 4, 0, cfg=CFG)
+
+
+# ---------------------------------------------------------------------------
+# old-vs-new equivalence + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_single_matches_legacy_entrypoint(g, single_result):
+    from repro.core.partitioner import partition as legacy
+    with pytest.warns(DeprecationWarning):
+        want = legacy(g, 8, config=CFG)
+    assert np.array_equal(single_result.assignment, want)
+
+
+def test_dist_p1_matches_legacy_entrypoint(g):
+    from repro.dist.dist_partitioner import dist_partition as legacy
+    with pytest.warns(DeprecationWarning):
+        want = legacy(g, 4, 1, cfg=CFG)     # grid routing default
+    res = Partitioner().run(
+        PartitionRequest(graph=g, k=4, config=CFG, backend="dist-grid",
+                         devices=1))
+    assert np.array_equal(res.assignment, want)
+    assert res.feasible
+
+
+# ---------------------------------------------------------------------------
+# result contract
+# ---------------------------------------------------------------------------
+
+def test_feasible_flag_agrees_with_metrics(g, single_result):
+    res = single_result
+    assert res.feasible == metrics.is_feasible(g, res.assignment, 8, 0.03)
+    assert res.feasible == res.metrics["feasible"]
+
+
+def test_result_summary_and_trace(g, single_result):
+    res = single_result
+    s = res.summary()
+    import json
+    json.dumps(s)                       # JSON-serializable
+    assert s["backend"] == "single" and s["n"] == g.n and s["m"] == g.m
+    assert res.trace, "per-level trace must be populated"
+    phases = [t["phase"] for t in res.trace]
+    assert phases[0] == "coarsen" and phases[-1] == "final"
+    assert all("time_s" in t for t in res.trace)
+    # the final trace record's cut is the result's cut
+    assert res.trace[-1]["cut"] == res.cut == metrics.edge_cut(
+        g, res.assignment)
+
+
+def test_convenience_partition_wrapper(g):
+    res = api_partition(g, 4, config=CFG)
+    assert res.backend == "single"
+    assert res.assignment.shape == (g.n,)
+    assert res.feasible
+
+
+# ---------------------------------------------------------------------------
+# batched sessions
+# ---------------------------------------------------------------------------
+
+def test_session_batch_equals_per_request():
+    spec = GraphSpec("rgg2d", 1200, 8.0, seed=7)
+    reqs = [PartitionRequest(graph=spec, k=k, config=CFG,
+                             backend="single") for k in (2, 4, 8)]
+    with PartitionSession(devices=1, max_workers=3) as sess:
+        batch = sess.run_batch(reqs)
+        stats = sess.stats()
+        assert len(sess._graph_cache) == 1   # one spec -> one materialize
+    solo = Partitioner().run_batch(reqs)
+    for b, s in zip(batch, solo):
+        assert np.array_equal(b.assignment, s.assignment)
+        assert b.cut == s.cut
+    assert stats["served"] == len(reqs)
+
+
+def test_session_rejects_after_close():
+    sess = PartitionSession(devices=1)
+    sess.close()
+    with pytest.raises(RuntimeError):
+        sess.submit(PartitionRequest(graph=GraphSpec("rgg2d", 100), k=2))
+
+
+# ---------------------------------------------------------------------------
+# runtime helper
+# ---------------------------------------------------------------------------
+
+def test_force_host_devices_after_init():
+    import jax
+    jax.devices()                       # ensure the backend exists
+    assert runtime.jax_backend_initialized()
+    runtime.force_host_devices(0)       # no-op
+    runtime.force_host_devices(1)       # enough devices -> no-op
+    with pytest.raises(RuntimeError, match="already initialized"):
+        runtime.force_host_devices(4096)

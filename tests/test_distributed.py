@@ -44,6 +44,16 @@ def test_grid_collectives_4dev():
     assert all(r["pass"] for r in res), res
 
 
+def test_api_facade_2dev():
+    """Fast (non-slow) facade coverage on 2 forced devices: the repro.api
+    dist backend must reproduce the driver bit-exactly, the feasibility
+    flag must agree with metrics, auto must route to a dist backend, and
+    a batched PartitionSession must equal per-request results."""
+    res = run_selftest("--devices", "2", "--n", "800", "--test", "api")
+    assert len(res) == 4, res
+    assert all(r["pass"] for r in res), res
+
+
 @pytest.mark.slow
 def test_halo_8dev():
     """Ghost-vertex exchange must reproduce the single-process graph's
