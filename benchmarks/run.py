@@ -5,6 +5,10 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 Sections:
   api            — repro.api facade: every backend on one request,
                    emits BENCH_api.json (cut/feasibility/time per backend)
+  dist           — distributed memory models: host/replicated vs
+                   sharded/owner on forced devices, emits BENCH_dist.json
+                   (per-level coarsen/exchange timings, peak replicated
+                   bytes per PE)
   quality        — Fig 2a/b: deep vs plain vs single-level LP edge cuts
   large_k        — Table 2: feasibility at large k
   balancer       — §4 Balancing: repair of adversarial imbalance
@@ -24,8 +28,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smallest instances (CI mode)")
-    ap.add_argument("--sections", default="api,quality,large_k,balancer,"
-                    "kernels,scaling")
+    ap.add_argument("--sections", default="api,dist,quality,large_k,"
+                    "balancer,kernels,scaling")
     args = ap.parse_args()
     sections = args.sections.split(",")
     print("name,us_per_call,derived")
@@ -33,6 +37,9 @@ def main() -> None:
     if "api" in sections:
         from . import api_bench
         api_bench.run(fast=args.fast)
+    if "dist" in sections:
+        from . import dist_bench
+        dist_bench.run(fast=args.fast)
     if "quality" in sections:
         from . import quality
         quality.run(scale="small", ks=(2, 8, 32),

@@ -13,6 +13,11 @@ Built-ins:
   * ``plain_mgp``       — classic multilevel baseline
   * ``single_level_lp`` — XtraPuLP-like single-level LP baseline
 
+The ``dist`` backends honor the request's distributed memory-model knobs
+(``contraction="host"|"sharded"``, ``weights="replicated"|"owner"``,
+docs/DIST.md) — they ride in through ``req.resolve_config()``, so no
+backend signature changes and no caller changes.
+
 The baselines being ordinary backends is what makes ``--compare`` "run
 the same request against N backends" instead of bespoke glue.
 """

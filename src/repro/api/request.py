@@ -46,7 +46,16 @@ class GraphSpec:
 @dataclasses.dataclass(frozen=True, eq=False)
 class PartitionRequest:
     """One partitioning job. ``backend="auto"`` lets the facade pick
-    single vs. distributed from graph size and ``devices``."""
+    single vs. distributed from graph size and ``devices``.
+
+    ``contraction`` / ``weights`` select the distributed memory model
+    (see docs/DIST.md) on the ``dist`` / ``dist-grid`` backends without
+    spelling out a full config: ``contraction="sharded"`` contracts each
+    level in place (paper §5) instead of gathering to the host, and
+    ``weights="owner"`` shards the cluster/block weight tables across
+    PEs instead of replicating them. ``None`` defers to the preset or
+    explicit config; the single-process backends ignore both.
+    """
     graph: Union[Graph, GraphSpec]
     k: int
     epsilon: float = 0.03
@@ -57,6 +66,8 @@ class PartitionRequest:
     devices: int = 1                            # PE count for dist backends
     collect_trace: bool = True                  # per-level records cost an
                                                 # O(m) cut pass per level
+    contraction: Optional[str] = None           # "host" | "sharded"
+    weights: Optional[str] = None               # "replicated" | "owner"
 
     def validate(self) -> "PartitionRequest":
         from .backends import available_backends
@@ -74,6 +85,14 @@ class PartitionRequest:
             raise ValueError(
                 f"unknown backend {self.backend!r}; expected 'auto' or "
                 f"one of {available_backends()}")
+        if self.contraction not in (None, "host", "sharded"):
+            raise ValueError(
+                f"contraction must be 'host' or 'sharded', "
+                f"got {self.contraction!r}")
+        if self.weights not in (None, "replicated", "owner"):
+            raise ValueError(
+                f"weights must be 'replicated' or 'owner', "
+                f"got {self.weights!r}")
         if self.config is not None:
             self.config.validate()
         if isinstance(self.graph, GraphSpec):
@@ -86,6 +105,15 @@ class PartitionRequest:
         return self.graph
 
     def resolve_config(self) -> PartitionerConfig:
-        """Preset (+ epsilon/seed) unless an explicit config was given."""
-        return resolve_config(self.preset, self.config, self.epsilon,
-                              self.seed)
+        """Preset (+ epsilon/seed) unless an explicit config was given;
+        request-level ``contraction``/``weights`` override either."""
+        cfg = resolve_config(self.preset, self.config, self.epsilon,
+                             self.seed)
+        overrides = {}
+        if self.contraction is not None:
+            overrides["contraction"] = self.contraction
+        if self.weights is not None:
+            overrides["weights"] = self.weights
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides).validate()
+        return cfg

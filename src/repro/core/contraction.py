@@ -1,9 +1,10 @@
 """Cluster contraction (paper §5, Graph Contraction) — host side.
 
 Deduplicates inter-cluster arcs and accumulates vertex/edge weights. The
-distributed version (dist/dist_partitioner.py) adds the cluster->PE
-assignment and the all-to-all edge exchange; the sequential kernel below is
-shared by both (per-PE local contraction)."""
+distributed version (dist/dist_contraction.py) adds the cluster->PE
+assignment and the all-to-all edge exchange; ``dedup_arcs`` below is the
+sequential kernel shared by both (the host contraction here, the per-PE
+local pre-contraction and owner-side accumulation there)."""
 from __future__ import annotations
 
 from typing import Tuple
@@ -11,6 +12,31 @@ from typing import Tuple
 import numpy as np
 
 from ..graphs.format import Graph, from_coo
+
+
+def dedup_arcs(csrc: np.ndarray, cdst: np.ndarray, w: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Drop self loops and merge parallel arcs (summing weights).
+
+    Returns (src, dst, w) int64 arrays sorted by (src, dst). This is the
+    local contraction kernel: ``contract`` runs it over the whole arc
+    set, the distributed path runs it per PE before and after the edge
+    exchange.
+    """
+    keep = csrc != cdst
+    csrc, cdst, w = csrc[keep], cdst[keep], w[keep]
+    if csrc.size == 0:
+        return (csrc.astype(np.int64), cdst.astype(np.int64),
+                w.astype(np.int64))
+    order = np.lexsort((cdst, csrc))
+    csrc, cdst, w = csrc[order], cdst[order], w[order]
+    first = np.concatenate(
+        [[True], (csrc[1:] != csrc[:-1]) | (cdst[1:] != cdst[:-1])])
+    seg = np.cumsum(first) - 1
+    merged = np.zeros(int(seg[-1]) + 1, dtype=np.int64)
+    np.add.at(merged, seg, w)
+    return (csrc[first].astype(np.int64), cdst[first].astype(np.int64),
+            merged)
 
 
 def contract(g: Graph, labels: np.ndarray) -> Tuple[Graph, np.ndarray]:
@@ -21,9 +47,7 @@ def contract(g: Graph, labels: np.ndarray) -> Tuple[Graph, np.ndarray]:
     cvw = np.zeros(nc, dtype=np.int64)
     np.add.at(cvw, cl, g.vweights)
     src = g.arc_tails()
-    csrc = cl[src]
-    cdst = cl[g.adjncy]
-    keep = csrc != cdst
-    gc = from_coo(nc, csrc[keep], cdst[keep], eweights=g.eweights[keep],
-                  vweights=cvw, symmetrize=False, dedup=True)
+    csrc, cdst, w = dedup_arcs(cl[src], cl[g.adjncy], g.eweights)
+    gc = from_coo(nc, csrc, cdst, eweights=w, vweights=cvw,
+                  symmetrize=False, dedup=False)
     return gc, cl.astype(np.int64)

@@ -38,6 +38,11 @@ class PartitionerConfig:
     max_levels: int = 64
     min_shrink: float = 0.95               # stop coarsening if n_c/n above
     seed: int = 0
+    # distributed-backend knobs (ignored by the single-process driver):
+    # where each level contracts and how cluster/block weight tables are
+    # laid out across PEs — see docs/DIST.md for the memory model
+    contraction: str = "host"              # "host" | "sharded"
+    weights: str = "replicated"            # "replicated" | "owner"
 
     def validate(self) -> "PartitionerConfig":
         """Reject configurations that would only fail later as opaque
@@ -61,6 +66,14 @@ class PartitionerConfig:
                 "cluster_iterations must be >= 1 and refine_iterations "
                 f">= 0, got {self.cluster_iterations}/"
                 f"{self.refine_iterations}")
+        if self.contraction not in ("host", "sharded"):
+            raise ValueError(
+                f"contraction must be 'host' or 'sharded', "
+                f"got {self.contraction!r}")
+        if self.weights not in ("replicated", "owner"):
+            raise ValueError(
+                f"weights must be 'replicated' or 'owner', "
+                f"got {self.weights!r}")
         return self
 
 

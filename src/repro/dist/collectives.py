@@ -12,6 +12,14 @@ of P, at the cost of forwarding each payload twice. Non-square P uses the
 largest divisor a <= sqrt(P) (6 PEs -> 2x3); prime P degenerates to the
 direct exchange.
 
+On top of the raw transposition sit three protocol primitives:
+``halo_exchange`` (ghost-vertex refresh over a static schedule),
+``exchange_segments`` (segmented payload exchange for the distributed
+contraction's edge shuffle, §5), and the owner-sharded weight-table pair
+``all_gather_1d`` / ``psum_scatter_1d`` (read / commit halves of the
+distributed cluster- and block-weight tables). Each routes either
+directly or through the grid with identical results.
+
 All functions are jit-side and must run inside ``shard_map`` over the 1D
 'pe' mesh axis.
 """
@@ -65,6 +73,75 @@ def all_to_all(slab: jnp.ndarray, axis_name: str, P: int,
                use_grid: bool = False) -> jnp.ndarray:
     return grid_all_to_all(slab, axis_name, P) if use_grid \
         else direct_all_to_all(slab, axis_name)
+
+
+def all_gather_1d(shard: jnp.ndarray, axis_name: str, P: int,
+                  use_grid: bool = False) -> jnp.ndarray:
+    """Concatenate the (S,) owner shards of all P PEs into the dense
+    (P*S,) table (every PE receives the same array).
+
+    The read half of the owner-sharded weight protocol: persistent state
+    stays O(S) per PE; the dense view exists only transiently inside the
+    chunk body. Grid routing gathers within grid rows, then columns —
+    bit-identical to the direct gather.
+    """
+    if not use_grid:
+        return lax.all_gather(shard, axis_name, tiled=True)
+    a, b = grid_factors(P)
+    if a == 1:
+        return lax.all_gather(shard, axis_name, tiled=True)
+    row_groups = [[r * b + c for c in range(b)] for r in range(a)]
+    col_groups = [[r * b + c for r in range(a)] for c in range(b)]
+    m = lax.all_gather(shard, axis_name, axis_index_groups=row_groups)
+    m = lax.all_gather(m, axis_name, axis_index_groups=col_groups)
+    return m.reshape(P * shard.shape[0])
+
+
+def psum_scatter_1d(dense: jnp.ndarray, axis_name: str, P: int,
+                    use_grid: bool = False) -> jnp.ndarray:
+    """Reduce-scatter a dense (P*S,) delta table to owner shards: PE p
+    receives sum_q dense_of_q[p*S:(p+1)*S].
+
+    The commit half of the owner-sharded weight protocol (movers scatter
+    weight deltas, owners hold the authoritative sum). Integer payloads
+    make grid and direct routing bit-identical.
+    """
+    S = dense.shape[0] // P
+    if not use_grid:
+        return lax.psum_scatter(dense, axis_name, scatter_dimension=0,
+                                tiled=True)
+    a, b = grid_factors(P)
+    if a == 1:
+        return lax.psum_scatter(dense, axis_name, scatter_dimension=0,
+                                tiled=True)
+    row_groups = [[r * b + c for c in range(b)] for r in range(a)]
+    col_groups = [[r * b + c for r in range(a)] for c in range(b)]
+    # phase 1: sum within grid columns, each PE keeping its dst-row block
+    m = lax.psum_scatter(dense.reshape(a, b * S), axis_name,
+                         scatter_dimension=0, axis_index_groups=col_groups,
+                         tiled=True)
+    # phase 2: sum within grid rows, each PE keeping its dst-column block
+    m = lax.psum_scatter(m.reshape(b, S), axis_name, scatter_dimension=0,
+                         axis_index_groups=row_groups, tiled=True)
+    return m.reshape(S)
+
+
+def exchange_segments(slab: jnp.ndarray, counts: jnp.ndarray,
+                      axis_name: str, P: int,
+                      use_grid: bool = False
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Segmented all-to-all: transpose a (P, S, ...) payload slab together
+    with its per-destination segment lengths (P,).
+
+    After the exchange PE p holds ``recv[q] = slab_of_q[p]`` with
+    ``recv_counts[q]`` valid rows — the edge-exchange primitive of the
+    distributed contraction (paper §5): segment q→p carries the coarse
+    arcs PE q pre-contracted whose coarse tail is owned by PE p.
+    """
+    recv = all_to_all(slab, axis_name, P, use_grid=use_grid)
+    rcounts = all_to_all(counts.reshape(P, 1), axis_name, P,
+                         use_grid=use_grid).reshape(P)
+    return recv, rcounts
 
 
 def halo_exchange(vals: jnp.ndarray,

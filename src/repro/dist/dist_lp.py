@@ -2,21 +2,38 @@
 
 shard_map port of the chunked LP kernels in ``core/lp.py`` over the
 ``GraphShards`` layout of ``graphs/distribute.py``. Each PE owns a
-contiguous vertex range; labels are *global* ids, ghost labels are
-refreshed through the static halo schedule after every chunk, and cluster
-weights are kept as a replicated (n+1,) table synchronized by psum.
+contiguous vertex range; labels are *global* ids, and ghost labels are
+refreshed through the static halo schedule after every chunk.
+
+Cluster/block weight tables come in two layouts, selected by the
+``weights`` argument:
+
+  * ``"replicated"`` — every PE carries the full (n+1,)/(k+1,) table,
+    synchronized by psum after each chunk. Simple and fast at test
+    scale, but O(n) persistent state per PE.
+  * ``"owner"`` — each PE persistently holds only its ~(n/P,) shard of
+    the table (uniform block distribution of the label space). Movers
+    *request* current weights via ``all_gather_1d`` at the top of each
+    chunk and *commit* their deltas via ``psum_scatter_1d``; the
+    overweight check runs on the owner's authoritative shard before the
+    flags are gathered back for the bounce. Persistent per-PE state
+    drops to O(n/P + k); the dense view exists only transiently inside
+    the chunk body (XLA's static shapes rule out sparse messages).
+
+Both layouts apply identical integer arithmetic in the same order, so
+they produce bit-identical labels.
 
 Weight constraint handling follows the paper's two tiers:
 
   * intra-PE races within a chunk use the exact hash-ordered revert of
     ``core.lp._cluster_chunk`` against the PE's local view;
-  * cross-PE races are only detected after the psum — overweight clusters
-    then *bounce* this chunk's incoming moves back (approximate revert,
-    §4 Coarsening). Exact enforcement happens on the host before
+  * cross-PE races are only detected after the commit — overweight
+    clusters then *bounce* this chunk's incoming moves back (approximate
+    revert, §4 Coarsening). Exact enforcement happens on the host before
     contraction (``core.coarsening.enforce_cluster_weights``).
 
-The bounce decision depends only on psum results, never on message
-routing, so grid and direct all-to-all runs produce identical labels.
+The bounce decision depends only on reduction results, never on message
+routing, so grid and direct runs produce identical labels.
 """
 from __future__ import annotations
 
@@ -32,10 +49,25 @@ from jax.sharding import Mesh, PartitionSpec as PS
 from ..core.lp import (I32_MAX, _argmax_target, _group_conns, _hash32,
                        _own_connection)
 from ..graphs.distribute import GraphShards, chunk_local_arcs
-from .collectives import halo_exchange
+from .collectives import all_gather_1d, halo_exchange, psum_scatter_1d
 from .compat import shard_map
 
 _BIG = np.int32(2**30)
+
+WEIGHT_MODES = ("replicated", "owner")
+
+
+def _check_weights_mode(weights: str) -> bool:
+    if weights not in WEIGHT_MODES:
+        raise ValueError(f"unknown weights mode {weights!r}; expected one "
+                         f"of {WEIGHT_MODES}")
+    return weights == "owner"
+
+
+def owner_table_width(num_labels: int, P: int) -> int:
+    """Per-PE owner-shard width: uniform block distribution of the label
+    space, padded so P shards tile the dense table exactly."""
+    return -(-num_labels // P)
 
 
 def _check_int32_weights(shards: GraphShards) -> None:
@@ -157,14 +189,47 @@ def _bounce_back(move, tgt, lab_cur, vw_pad, cw, budget_like, num_labels):
     return move & ~bounce, cw
 
 
+# --- owner-sharded weight-table protocol (weights="owner") -----------------
+
+def _commit_to_owners(move, tgt, lab_cur, vw_pad, cw_own, L, P, use_grid):
+    """Owner-mode apply: scatter this chunk's move deltas into a transient
+    dense table and reduce-scatter them onto the owners' authoritative
+    shards. Returns the updated (L/P,) owner shard."""
+    vw_m = jnp.where(move, vw_pad, 0)
+    d_in = jnp.zeros((L,), jnp.int32).at[tgt].add(vw_m, mode="drop")
+    d_out = jnp.zeros((L,), jnp.int32).at[lab_cur].add(vw_m, mode="drop")
+    return cw_own + psum_scatter_1d(d_in - d_out, "pe", P,
+                                    use_grid=use_grid)
+
+
+def _bounce_back_owner(move, tgt, lab_cur, vw_pad, cw_own, budget_own, L,
+                       P, use_grid):
+    """Approximate cross-PE revert, owner-authoritative: each owner checks
+    *its shard* against its budget slice, the overweight flags are
+    gathered back, and bounced moves return their weight via a second
+    commit. Same flags as the replicated check, O(L/P) persistent state."""
+    over = all_gather_1d(cw_own > budget_own, "pe", P, use_grid=use_grid)
+    bounce = move & over[tgt]
+    vw_b = jnp.where(bounce, vw_pad, 0)
+    b_in = jnp.zeros((L,), jnp.int32).at[lab_cur].add(vw_b, mode="drop")
+    b_out = jnp.zeros((L,), jnp.int32).at[tgt].add(vw_b, mode="drop")
+    cw_own = cw_own + psum_scatter_1d(b_in - b_out, "pe", P,
+                                      use_grid=use_grid)
+    return move & ~bounce, cw_own
+
+
 # ---------------------------------------------------------------------------
 # distributed clustering
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=32)
 def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
-                      use_grid):
+                      use_grid, owner=False):
     num_labels = n + 1           # label values are global vertex ids
+    S_w = owner_table_width(num_labels, P)
+    # owner mode pads the dense *transient* view so P shards tile it;
+    # only the (S_w,) shard persists across chunks
+    L = P * S_w if owner else num_labels
 
     def per_pe(src, dst, w, vw_loc, lgid, ggid, send_idx, recv_slot,
                salts, W):
@@ -172,46 +237,66 @@ def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
         vw_loc, lgid, ggid = vw_loc[0], lgid[0], ggid[0]
         send_idx, recv_slot = send_idx[0], recv_slot[0]
         vw_pad = jnp.concatenate([vw_loc, jnp.zeros((1,), jnp.int32)])
-        # global per-cluster weights, replicated: every vertex starts as a
-        # singleton so cw == scattered vertex weights
-        cw = jnp.zeros((num_labels,), jnp.int32).at[lgid].add(
-            vw_loc, mode="drop")
-        cw = lax.psum(cw, "pe")
-        cw = cw.at[n].set(_BIG)              # sentinel label never a target
-        budget = jnp.full((num_labels,), W, jnp.int32).at[n].set(-_BIG)
+        # global per-cluster weights: every vertex starts as a singleton
+        # so cw == scattered vertex weights
+        dense0 = jnp.zeros((L,), jnp.int32).at[lgid].add(vw_loc,
+                                                         mode="drop")
+        if owner:
+            cw_state = psum_scatter_1d(dense0, "pe", P, use_grid=use_grid)
+            gidx = lax.axis_index("pe") * S_w + \
+                jnp.arange(S_w, dtype=jnp.int32)
+            cw_state = jnp.where(gidx == n, _BIG, cw_state)
+            budget_own = jnp.where(gidx == n, -_BIG, W).astype(jnp.int32)
+        else:
+            cw_state = lax.psum(dense0, "pe")
+            cw_state = cw_state.at[n].set(_BIG)  # sentinel never a target
+            budget = jnp.full((L,), W, jnp.int32).at[n].set(-_BIG)
         lab_loc = lgid.astype(jnp.int32)     # own global id = own cluster
         lab_ghost = ggid.astype(jnp.int32)
 
         def chunk_body(carry, xs):
-            lab_loc, lab_ghost, cw = carry
+            lab_loc, lab_ghost, cw_state = carry
             c_src, c_dst, c_w, salt = xs
+            # owner mode: request current weights from the owners (the
+            # dense views live only inside this chunk body)
+            if owner:
+                cw = all_gather_1d(cw_state, "pe", P, use_grid=use_grid)
+                bud = jnp.full((L,), W, jnp.int32).at[n].set(-_BIG)
+            else:
+                cw, bud = cw_state, budget
             tab = jnp.concatenate(
                 [lab_loc, lab_ghost, jnp.full((1,), n, jnp.int32)])
             lab_src_tab = jnp.concatenate(
                 [lab_loc, jnp.full((1,), n, jnp.int32)])
             move, tgt, lab_cur = _local_moves(
-                lab_src_tab, tab, cw, budget, vw_pad, c_src, c_dst, c_w,
+                lab_src_tab, tab, cw, bud, vw_pad, c_src, c_dst, c_w,
                 salt, n_loc, cluster_mode=True)
             vw_m = jnp.where(move, vw_pad, 0)
-            d_in = jnp.zeros((num_labels,), jnp.int32).at[tgt].add(
+            d_in = jnp.zeros((L,), jnp.int32).at[tgt].add(
                 vw_m, mode="drop")
-            d_out = jnp.zeros((num_labels,), jnp.int32).at[lab_cur].add(
+            d_out = jnp.zeros((L,), jnp.int32).at[lab_cur].add(
                 vw_m, mode="drop")
             move = _intra_pe_revert(move, tgt, lab_cur, vw_pad, cw,
-                                    d_in, d_out, salt, n_loc, num_labels,
-                                    W)
-            cw = _apply_and_sync(move, tgt, lab_cur, vw_pad, cw,
-                                 num_labels)
-            move, cw = _bounce_back(move, tgt, lab_cur, vw_pad, cw,
-                                    budget, num_labels)
+                                    d_in, d_out, salt, n_loc, L, W)
+            if owner:
+                cw_state = _commit_to_owners(move, tgt, lab_cur, vw_pad,
+                                             cw_state, L, P, use_grid)
+                move, cw_state = _bounce_back_owner(
+                    move, tgt, lab_cur, vw_pad, cw_state, budget_own, L,
+                    P, use_grid)
+            else:
+                cw_state = _apply_and_sync(move, tgt, lab_cur, vw_pad,
+                                           cw_state, L)
+                move, cw_state = _bounce_back(move, tgt, lab_cur, vw_pad,
+                                              cw_state, bud, L)
             lab_loc = jnp.where(move[:n_loc], tgt[:n_loc], lab_loc)
             lab_ghost = halo_exchange(lab_loc, send_idx, recv_slot,
                                       n_ghost, "pe", P, use_grid=use_grid)
-            return (lab_loc, lab_ghost, cw), ()
+            return (lab_loc, lab_ghost, cw_state), ()
 
         for it in range(num_iterations):
-            (lab_loc, lab_ghost, cw), _ = lax.scan(
-                chunk_body, (lab_loc, lab_ghost, cw),
+            (lab_loc, lab_ghost, cw_state), _ = lax.scan(
+                chunk_body, (lab_loc, lab_ghost, cw_state),
                 (src, dst, w, salts[it]))
         return lab_loc[None]
 
@@ -229,21 +314,24 @@ def dist_cluster(shards: GraphShards,
                  num_chunks: int = 8,
                  seed: int = 0,
                  use_grid: bool = True,
-                 mesh: Mesh = None) -> np.ndarray:
+                 mesh: Mesh = None,
+                 weights: str = "replicated") -> np.ndarray:
     """Distributed size-constrained LP clustering over graph shards.
 
     Returns (n,) int64 global cluster labels (label values are vertex
     ids). Cluster weights respect ``max_cluster_weight`` up to cross-PE
     race tolerance; callers contract only after exact host-side
-    enforcement.
+    enforcement. ``weights`` picks the table layout (module docstring);
+    both layouts return bit-identical labels.
     """
     P, n = shards.P, shards.n
+    owner = _check_weights_mode(weights)
     _check_int32_weights(shards)
     mesh = _resolve_mesh(mesh, P)
     srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
     B = srcs.shape[1]
     fn = _build_cluster_fn(mesh, P, n, shards.n_loc, shards.n_ghost, B,
-                           num_iterations, use_grid)
+                           num_iterations, use_grid, owner)
     salts = (np.arange(num_iterations * B, dtype=np.uint64).reshape(
         num_iterations, B) * 0x85EBCA6B + seed * 1000003) % (2**32)
     lab = fn(jnp.asarray(srcs), jnp.asarray(dsts), jnp.asarray(ws),
@@ -265,8 +353,10 @@ def dist_cluster(shards: GraphShards,
 
 @functools.lru_cache(maxsize=32)
 def _build_refine_fn(mesh, P, k, n_loc, n_ghost, B, num_iterations,
-                     use_grid):
+                     use_grid, owner=False):
     kk = k + 1                   # sentinel block k
+    S_k = owner_table_width(kk, P)
+    L = P * S_k if owner else kk
 
     def per_pe(src, dst, w, vw_loc, part_loc, part_ghost, send_idx,
                recv_slot, salts, l_max):
@@ -274,16 +364,26 @@ def _build_refine_fn(mesh, P, k, n_loc, n_ghost, B, num_iterations,
         vw_loc, part_loc, part_ghost = vw_loc[0], part_loc[0], part_ghost[0]
         send_idx, recv_slot = send_idx[0], recv_slot[0]
         vw_pad = jnp.concatenate([vw_loc, jnp.zeros((1,), jnp.int32)])
-        bw = jnp.zeros((kk,), jnp.int32).at[part_loc].add(vw_loc,
-                                                          mode="drop")
-        bw = lax.psum(bw, "pe")
-        bw = bw.at[k].set(_BIG)
+        dense0 = jnp.zeros((L,), jnp.int32).at[part_loc].add(vw_loc,
+                                                             mode="drop")
         budget = jnp.concatenate([l_max.astype(jnp.int32),
-                                  jnp.full((1,), -_BIG, jnp.int32)])
+                                  jnp.full((L - k,), -_BIG, jnp.int32)])
+        if owner:
+            bw_state = psum_scatter_1d(dense0, "pe", P, use_grid=use_grid)
+            gidx = lax.axis_index("pe") * S_k + \
+                jnp.arange(S_k, dtype=jnp.int32)
+            bw_state = jnp.where(gidx == k, _BIG, bw_state)
+            budget_own = lax.dynamic_slice(
+                budget, (lax.axis_index("pe") * S_k,), (S_k,))
+        else:
+            bw_state = lax.psum(dense0, "pe")
+            bw_state = bw_state.at[k].set(_BIG)
 
         def chunk_body(carry, xs):
-            lab_loc, lab_ghost, bw = carry
+            lab_loc, lab_ghost, bw_state = carry
             c_src, c_dst, c_w, salt = xs
+            bw = all_gather_1d(bw_state, "pe", P, use_grid=use_grid) \
+                if owner else bw_state
             tab = jnp.concatenate(
                 [lab_loc, lab_ghost, jnp.full((1,), k, jnp.int32)])
             lab_src_tab = jnp.concatenate(
@@ -291,19 +391,27 @@ def _build_refine_fn(mesh, P, k, n_loc, n_ghost, B, num_iterations,
             move, tgt, lab_cur = _local_moves(
                 lab_src_tab, tab, bw, budget, vw_pad, c_src, c_dst, c_w,
                 salt, n_loc, cluster_mode=False)
-            bw = _apply_and_sync(move, tgt, lab_cur, vw_pad, bw, kk)
-            move, bw = _bounce_back(move, tgt, lab_cur, vw_pad, bw,
-                                    budget, kk)
+            if owner:
+                bw_state = _commit_to_owners(move, tgt, lab_cur, vw_pad,
+                                             bw_state, L, P, use_grid)
+                move, bw_state = _bounce_back_owner(
+                    move, tgt, lab_cur, vw_pad, bw_state, budget_own, L,
+                    P, use_grid)
+            else:
+                bw_state = _apply_and_sync(move, tgt, lab_cur, vw_pad,
+                                           bw_state, L)
+                move, bw_state = _bounce_back(move, tgt, lab_cur, vw_pad,
+                                              bw_state, budget, L)
             lab_loc = jnp.where(move[:n_loc], tgt[:n_loc], lab_loc)
             lab_ghost = halo_exchange(lab_loc, send_idx, recv_slot,
                                       n_ghost, "pe", P, use_grid=use_grid)
-            return (lab_loc, lab_ghost, bw), ()
+            return (lab_loc, lab_ghost, bw_state), ()
 
         lab_loc = part_loc
         lab_ghost = part_ghost
         for it in range(num_iterations):
-            (lab_loc, lab_ghost, bw), _ = lax.scan(
-                chunk_body, (lab_loc, lab_ghost, bw),
+            (lab_loc, lab_ghost, bw_state), _ = lax.scan(
+                chunk_body, (lab_loc, lab_ghost, bw_state),
                 (src, dst, w, salts[it]))
         return lab_loc[None]
 
@@ -322,22 +430,26 @@ def dist_lp_refine(shards: GraphShards,
                    num_chunks: int = 8,
                    seed: int = 0,
                    use_grid: bool = True,
-                   mesh: Mesh = None) -> np.ndarray:
+                   mesh: Mesh = None,
+                   weights: str = "replicated") -> np.ndarray:
     """Distributed chunked LP refinement of a k-way partition.
 
     Same move rule as ``core.lp._refine_chunk`` (positive gain, or zero
-    gain into the lighter block), block weights replicated and psum-synced
-    per chunk, overweight blocks bouncing racing moves back. May leave the
-    partition slightly infeasible; pair with a balancing pass.
+    gain into the lighter block); block weights either replicated and
+    psum-synced per chunk or owner-sharded (``weights``, module
+    docstring), overweight blocks bouncing racing moves back either way.
+    May leave the partition slightly infeasible; pair with a balancing
+    pass.
     """
     P, n = shards.P, shards.n
+    owner = _check_weights_mode(weights)
     _check_int32_weights(shards)
     k = int(l_max_vec.shape[0])
     mesh = _resolve_mesh(mesh, P)
     srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
     B = srcs.shape[1]
     fn = _build_refine_fn(mesh, P, k, shards.n_loc, shards.n_ghost, B,
-                          num_iterations, use_grid)
+                          num_iterations, use_grid, owner)
     part_pad = np.concatenate([part.astype(np.int64), [k]])  # sentinel gid=n
     part_loc = part_pad[np.minimum(shards.local_gid, n)].astype(np.int32)
     part_ghost = part_pad[np.minimum(shards.ghost_gid, n)].astype(np.int32)

@@ -5,7 +5,16 @@ Mirrors ``core/deep_mgp.py``: while the graph is large it coarsens with
 PE's budget it delegates to the single-process deep-MGP path (the paper's
 own base case: after log P contractions the coarse graph is gathered and
 partitioned on fewer PEs). Uncoarsening projects through the contraction
-maps and runs distributed refinement + balancing per level.
+maps and runs distributed refinement + balancing per level, reusing the
+shards built during coarsening — each level is distributed exactly once.
+
+Two ``PartitionerConfig`` knobs select the distributed memory model
+(docs/DIST.md): ``contraction`` ("host" gathers each level and contracts
+via ``core.contraction``; "sharded" contracts in place via the paper-§5
+cluster→PE assignment + all-to-all edge exchange of
+``dist_contraction``) and ``weights`` ("replicated" psum-synced tables
+vs "owner"-sharded authoritative tables in ``dist_lp``). The defaults
+("host"/"replicated") reproduce the original pipeline bit-for-bit.
 
 The public ``dist_partition`` entrypoint is a deprecation shim; new code
 routes through ``repro.api`` (backend names ``"dist"`` / ``"dist-grid"``),
@@ -25,8 +34,9 @@ from ..core.coarsening import enforce_cluster_weights
 from ..core.contraction import contract
 from ..core.deep_mgp import (PartitionerConfig, check_k,
                              partition as sp_partition, trace_event)
-from ..graphs.distribute import distribute_graph
+from ..graphs.distribute import GraphShards, distribute_graph
 from ..graphs.format import Graph
+from .dist_contraction import dist_contract
 from .dist_lp import dist_cluster, dist_lp_refine
 
 
@@ -38,17 +48,22 @@ def dist_refine_and_balance(g: Graph,
                             num_chunks: int = 8,
                             seed: int = 0,
                             use_grid: bool = True,
-                            mesh=None) -> np.ndarray:
+                            mesh=None,
+                            shards: Optional[GraphShards] = None,
+                            weights: str = "replicated") -> np.ndarray:
     """Distributed BalanceAndRefine: sharded LP refinement (block weights
-    psum-synced, races bounced) followed by the exact global balancer so
-    the result always satisfies the per-block budgets."""
+    replicated or owner-sharded per ``weights``, races bounced) followed
+    by the exact global balancer so the result always satisfies the
+    per-block budgets. ``shards`` lets the driver pass the level's
+    existing distribution instead of re-sharding ``g``."""
     part = np.asarray(part, dtype=np.int64)
     l_max_vec = np.asarray(l_max_vec, dtype=np.int64)
-    shards = distribute_graph(g, P)
+    if shards is None:
+        shards = distribute_graph(g, P)
     part = dist_lp_refine(shards, part, l_max_vec,
                           num_iterations=num_iterations,
                           num_chunks=num_chunks, seed=seed,
-                          use_grid=use_grid, mesh=mesh)
+                          use_grid=use_grid, mesh=mesh, weights=weights)
     part = rebalance(g, part, l_max_vec, seed=seed + 1)
     return part
 
@@ -64,9 +79,9 @@ def dist_partition_impl(g: Graph,
 
     Returns (n,) int64 block ids satisfying the paper's relaxed balance
     constraint. Matches the single-process reference pipeline except that
-    fine levels cluster and refine under shard_map. ``mesh`` lets a
-    serving session reuse one 1D 'pe' mesh across requests; ``trace``
-    collects per-level size/cut/timing records.
+    fine levels cluster, contract and refine under shard_map. ``mesh``
+    lets a serving session reuse one 1D 'pe' mesh across requests;
+    ``trace`` collects per-level size/cut/timing records.
     """
     cfg = (cfg or PartitionerConfig()).validate()
     check_k(k, "dist_partition")
@@ -80,28 +95,49 @@ def dist_partition_impl(g: Graph,
     C, K = cfg.contraction_limit, cfg.initial_k
 
     # ---- distributed deep coarsening -----------------------------------
-    hierarchy: List[Tuple[Graph, np.ndarray]] = []
+    # hierarchy rows carry the level's shards so uncoarsening reuses them
+    # instead of re-distributing the same graph
+    hierarchy: List[Tuple[Graph, np.ndarray, GraphShards]] = []
     G = g
+    shards: Optional[GraphShards] = None
     level = 0
     while G.n > C * min(k, K) and G.n >= 2 * P and level < cfg.max_levels:
         kprime = max(1, min(k, G.n // max(1, C)))
         W = max(1, int(cfg.epsilon * total_c / kprime))
         t0 = time.perf_counter()
-        shards = distribute_graph(G, P)
+        if shards is None:  # sharded contraction hands us the next level
+            shards = distribute_graph(G, P)
         labels = dist_cluster(shards, W,
                               num_iterations=cfg.cluster_iterations,
                               num_chunks=cfg.num_chunks,
                               seed=cfg.seed + level, use_grid=use_grid,
-                              mesh=mesh)
+                              mesh=mesh, weights=cfg.weights)
         labels = enforce_cluster_weights(labels, np.asarray(G.vweights), W)
-        Gc, mapping = contract(G, labels)
+        if cfg.contraction == "sharded":
+            res = dist_contract(shards, labels, use_grid=use_grid,
+                                mesh=mesh)
+            Gc, mapping, next_shards = res.graph, res.mapping, res.shards
+            cstats = res.stats
+        else:
+            Gc, mapping = contract(G, labels)
+            next_shards, cstats = None, None
         if Gc.n >= G.n * cfg.min_shrink:
-            break  # converged — coarsest distributed level reached
-        trace_event(trace, phase="dist-coarsen", level=level, n=G.n, m=G.m,
-                    coarse_n=Gc.n, W=W, P=P,
-                    time_s=round(time.perf_counter() - t0, 6))
-        hierarchy.append((G, mapping))
-        G = Gc
+            # converged — coarsest distributed level reached; record the
+            # discarded level so benchmark traces explain the early exit
+            trace_event(trace, phase="dist-coarsen-converged", level=level,
+                        n=G.n, m=G.m, coarse_n=Gc.n, W=W, P=P,
+                        time_s=round(time.perf_counter() - t0, 6))
+            break
+        rec = dict(phase="dist-coarsen", level=level, n=G.n, m=G.m,
+                   coarse_n=Gc.n, W=W, P=P, contraction=cfg.contraction,
+                   weights=cfg.weights,
+                   time_s=round(time.perf_counter() - t0, 6))
+        if cstats is not None:
+            rec.update(exchange_s=cstats["exchange_s"],
+                       payload_bytes=cstats["payload_bytes"])
+        trace_event(trace, **rec)
+        hierarchy.append((G, mapping, shards))
+        G, shards = Gc, next_shards
         level += 1
 
     # ---- base case: single-process deep MGP on the coarse graph --------
@@ -109,13 +145,14 @@ def dist_partition_impl(g: Graph,
 
     # ---- uncoarsening: project + distributed refine/balance ------------
     lvec = np.full(k, l_final, dtype=np.int64)
-    for lvl, (Gf, mapping) in enumerate(reversed(hierarchy)):
+    for lvl, (Gf, mapping, fshards) in enumerate(reversed(hierarchy)):
         t0 = time.perf_counter()
         part = part[mapping]
         part = dist_refine_and_balance(
             Gf, part, lvec, P, num_iterations=cfg.refine_iterations,
             num_chunks=cfg.num_chunks,
-            seed=cfg.seed + Gf.n % 1000003, use_grid=use_grid, mesh=mesh)
+            seed=cfg.seed + Gf.n % 1000003, use_grid=use_grid, mesh=mesh,
+            shards=fshards, weights=cfg.weights)
         if trace is not None:
             trace_event(trace, phase="dist-uncoarsen", level=lvl, n=Gf.n,
                         m=Gf.m, blocks=k, P=P,

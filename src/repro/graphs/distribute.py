@@ -56,25 +56,30 @@ def balanced_offsets(g: Graph, P: int, by_arcs: bool = True) -> np.ndarray:
     return np.maximum.accumulate(offsets)
 
 
-def distribute_graph(g: Graph, P: int, by_arcs: bool = True) -> GraphShards:
-    offsets = balanced_offsets(g, P, by_arcs)
-    n = g.n
-    src = g.arc_tails()
+def assemble_shards(n: int, offsets: np.ndarray,
+                    arc_parts: List[Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]],
+                    vw_parts: List[np.ndarray]) -> GraphShards:
+    """Build ``GraphShards`` from per-PE COO parts.
 
+    PE p owns the contiguous global range [offsets[p], offsets[p+1]);
+    ``arc_parts[p]`` is its (src_gid, dst_gid, w) arc triple (tails in
+    p's range, sorted by tail) and ``vw_parts[p]`` its owned vertex
+    weights. ``distribute_graph`` feeds this from CSR slices; the
+    distributed contraction feeds it the owner-side coarse arcs so a
+    coarse graph can enter the next level without a host CSR round-trip.
+    """
+    P = len(arc_parts)
     locals_per_pe: List[Tuple[int, int]] = [
         (int(offsets[p]), int(offsets[p + 1])) for p in range(P)]
     n_loc = max(1, max(v1 - v0 for v0, v1 in locals_per_pe))
 
     ghost_lists: List[np.ndarray] = []
-    arcs_per_pe = []
     for p, (v0, v1) in enumerate(locals_per_pe):
-        a0, a1 = int(g.indptr[v0]), int(g.indptr[v1])
-        d = g.adjncy[a0:a1]
-        ext = np.unique(d[(d < v0) | (d >= v1)])
-        ghost_lists.append(ext)
-        arcs_per_pe.append((a0, a1))
+        d = arc_parts[p][1]
+        ghost_lists.append(np.unique(d[(d < v0) | (d >= v1)]))
     n_ghost = max(1, max(gl.size for gl in ghost_lists))
-    m_loc = max(1, max(a1 - a0 for a0, a1 in arcs_per_pe))
+    m_loc = max(1, max(a[0].size for a in arc_parts))
 
     # halo width: p sends to q the vertices in q's ghost list ∩ p's range
     S = 1
@@ -98,18 +103,18 @@ def distribute_graph(g: Graph, P: int, by_arcs: bool = True) -> GraphShards:
 
     for p, (v0, v1) in enumerate(locals_per_pe):
         cnt_v = v1 - v0
-        a0, a1 = arcs_per_pe[p]
-        cnt_a = a1 - a0
+        s, d, w = arc_parts[p]
+        cnt_a = s.size
         gl = ghost_lists[p]
-        arc_src[p, :cnt_a] = src[a0:a1] - v0
-        d = g.adjncy[a0:a1].astype(np.int64)
+        arc_src[p, :cnt_a] = s - v0
+        d = d.astype(np.int64)
         is_local = (d >= v0) & (d < v1)
         idx = np.empty(cnt_a, dtype=np.int64)
         idx[is_local] = d[is_local] - v0
         idx[~is_local] = n_loc + np.searchsorted(gl, d[~is_local])
         arc_dst_idx[p, :cnt_a] = idx
-        arc_w[p, :cnt_a] = g.eweights[a0:a1]
-        vweights[p, :cnt_v] = g.vweights[v0:v1]
+        arc_w[p, :cnt_a] = w
+        vweights[p, :cnt_v] = vw_parts[p]
         local_gid[p, :cnt_v] = np.arange(v0, v1)
         ghost_gid[p, :gl.size] = gl
         for q in range(P):
@@ -124,6 +129,18 @@ def distribute_graph(g: Graph, P: int, by_arcs: bool = True) -> GraphShards:
                        vweights=vweights, local_gid=local_gid,
                        ghost_gid=ghost_gid, send_idx=send_idx,
                        recv_slot=recv_slot)
+
+
+def distribute_graph(g: Graph, P: int, by_arcs: bool = True) -> GraphShards:
+    offsets = balanced_offsets(g, P, by_arcs)
+    src = g.arc_tails()
+    arc_parts, vw_parts = [], []
+    for p in range(P):
+        v0, v1 = int(offsets[p]), int(offsets[p + 1])
+        a0, a1 = int(g.indptr[v0]), int(g.indptr[v1])
+        arc_parts.append((src[a0:a1], g.adjncy[a0:a1], g.eweights[a0:a1]))
+        vw_parts.append(g.vweights[v0:v1])
+    return assemble_shards(g.n, offsets, arc_parts, vw_parts)
 
 
 def chunk_local_arcs(shards: GraphShards, num_chunks: int

@@ -37,6 +37,15 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=0,
                     help=">0: force that many host devices (must happen "
                          "before jax initializes)")
+    ap.add_argument("--contraction", default=None,
+                    choices=["host", "sharded"],
+                    help="dist-backend memory model: gather each level "
+                         "(host) or contract in place (sharded) — "
+                         "docs/DIST.md")
+    ap.add_argument("--weights", default=None,
+                    choices=["replicated", "owner"],
+                    help="dist-backend weight tables: psum-replicated or "
+                         "owner-sharded (O(n/P + k) per PE)")
     ap.add_argument("--trace", action="store_true",
                     help="also print the per-level trace records")
     args = ap.parse_args()
@@ -54,7 +63,8 @@ def main() -> int:
         graph=GraphSpec(args.family, args.n, args.avg_deg, seed=args.seed),
         k=args.k, epsilon=args.epsilon, preset=args.preset,
         seed=args.seed, backend=args.backend,
-        devices=args.devices or 1)
+        devices=args.devices or 1,
+        contraction=args.contraction, weights=args.weights)
     engine = Partitioner()
     res = engine.run(req)
     print(json.dumps(res.summary()))

@@ -6,10 +6,12 @@ Forces the device count through ``repro.api.runtime`` *before* any jax
 init (the count locks at first backend creation; the helper raises
 instead of silently misconfiguring), then validates the distributed
 implementation against the single-process reference: collectives
-round-trip, distributed clustering validity, distributed partition
-feasibility + quality, grid vs direct all-to-all equivalence, and the
-``repro.api`` facade (old-vs-new equality, batched sessions). Prints one
-JSON line per test; exit code 0 iff all pass.
+round-trip, distributed clustering validity (replicated and
+owner-sharded weight tables), sharded contraction invariants
+(``--test contract``), distributed partition feasibility + quality
+under both memory models, grid vs direct all-to-all equivalence, and
+the ``repro.api`` facade (old-vs-new equality, batched sessions).
+Prints one JSON line per test; exit code 0 iff all pass.
 """
 import argparse
 import json
@@ -21,7 +23,8 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
-                             "partition", "refine", "smoke", "api"])
+                             "contract", "partition", "refine", "smoke",
+                             "api"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -132,6 +135,54 @@ def main() -> int:
                                seed=1, use_grid=False)
         report("cluster.grid_vs_direct",
                np.array_equal(raw, labels2))
+        # owner-sharded weight tables apply the same integer arithmetic in
+        # the same order as the replicated psum path -> identical labels
+        labels3 = dist_cluster(shards, W, num_iterations=3, num_chunks=4,
+                               seed=1, use_grid=True, weights="owner")
+        report("cluster.owner_vs_replicated",
+               np.array_equal(raw, labels3))
+
+    if args.test in ("all", "contract"):
+        from repro.core.coarsening import enforce_cluster_weights
+        from repro.core.contraction import contract
+        from repro.dist.dist_contraction import dist_contract
+        shards = distribute_graph(g, P)
+        W = max(1, int(0.03 * g.total_vweight / args.k))
+        labels = enforce_cluster_weights(
+            dist_cluster(shards, W, num_iterations=3, num_chunks=4,
+                         seed=1, use_grid=True),
+            np.asarray(g.vweights), W)
+        res = dist_contract(shards, labels, use_grid=True)
+        gc_h, map_h = contract(g, labels)
+        gc_d, map_d = res.graph, res.mapping
+        # invariants: weight conservation, no self loops, symmetry
+        src = gc_d.arc_tails()
+        inv_ok = (gc_d.total_vweight == g.total_vweight
+                  and bool(np.all(src != gc_d.adjncy)))
+        try:
+            gc_d.validate()
+        except AssertionError:
+            inv_ok = False
+        # host and sharded contraction agree up to a coarse-id bijection
+        pairs = np.unique(np.stack([map_h, map_d], 1), axis=0)
+        iso_ok = (gc_d.n == gc_h.n and gc_d.m == gc_h.m
+                  and pairs.shape[0] == gc_h.n
+                  and np.unique(pairs[:, 0]).size == gc_h.n
+                  and np.unique(pairs[:, 1]).size == gc_h.n)
+        # cut of any coarse partition == cut of its fine projection
+        rng = np.random.default_rng(4)
+        pc = rng.integers(0, args.k, size=gc_d.n)
+        cut_ok = metrics.edge_cut(gc_d, pc) == \
+            metrics.edge_cut(g, pc[map_d])
+        report("contract.sharded", inv_ok and iso_ok and cut_ok,
+               coarse_m=gc_d.m, **res.stats)
+        # grid and direct routing ship identical coarse graphs
+        res2 = dist_contract(shards, labels, use_grid=False)
+        report("contract.grid_vs_direct",
+               np.array_equal(res2.mapping, res.mapping) and
+               np.array_equal(res2.graph.indptr, res.graph.indptr) and
+               np.array_equal(res2.graph.adjncy, res.graph.adjncy) and
+               np.array_equal(res2.graph.eweights, res.graph.eweights))
 
     if args.test in ("all", "refine"):
         rng = np.random.default_rng(2)
@@ -148,6 +199,7 @@ def main() -> int:
                cut_after=cut1, feasible=feas)
 
     if args.test in ("all", "partition"):
+        import dataclasses
         part = dist_partition_impl(g, args.k, P, cfg=cfg)
         s = metrics.summarize(g, part, args.k, 0.03)
         ref = partition(g, args.k, cfg)
@@ -156,6 +208,15 @@ def main() -> int:
         report("partition.dist", s["feasible"] and
                s["cut"] <= max(1.5 * cut_ref, cut_ref + 50),
                dist=s, ref_cut=cut_ref)
+        # fully sharded memory model: in-place contraction + owner-sharded
+        # weight tables must stay feasible within the same quality bound
+        cfg_sh = dataclasses.replace(cfg, contraction="sharded",
+                                     weights="owner")
+        part_sh = dist_partition_impl(g, args.k, P, cfg=cfg_sh)
+        s_sh = metrics.summarize(g, part_sh, args.k, 0.03)
+        report("partition.dist_sharded_owner", s_sh["feasible"] and
+               s_sh["cut"] <= max(1.5 * cut_ref, cut_ref + 50),
+               dist=s_sh, ref_cut=cut_ref)
 
     if args.test in ("all", "api"):
         from repro.api import (PartitionRequest, Partitioner,

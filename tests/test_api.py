@@ -81,12 +81,27 @@ def test_register_backend_roundtrip(g):
 @pytest.mark.parametrize("kw", [
     dict(k=0), dict(k=-3), dict(epsilon=0.0), dict(epsilon=-1.0),
     dict(devices=0), dict(preset="turbo"), dict(backend="nope"),
+    dict(contraction="gather"), dict(weights="dense"),
 ])
 def test_request_validation_rejects(kw, g):
     base = dict(graph=g, k=8)
     base.update(kw)
     with pytest.raises(ValueError):
         PartitionRequest(**base).validate()
+
+
+def test_request_memory_model_overrides(g):
+    """contraction/weights ride into the resolved config; None defers."""
+    req = PartitionRequest(graph=g, k=8, contraction="sharded",
+                           weights="owner").validate()
+    cfg = req.resolve_config()
+    assert cfg.contraction == "sharded" and cfg.weights == "owner"
+    base = PartitionRequest(graph=g, k=8).resolve_config()
+    assert base.contraction == "host" and base.weights == "replicated"
+    # an explicit config is still overridden by request-level knobs
+    cfg2 = PartitionRequest(graph=g, k=8, config=CFG,
+                            weights="owner").resolve_config()
+    assert cfg2.weights == "owner" and cfg2.contraction == "host"
 
 
 def test_request_validation_unknown_family():
@@ -97,6 +112,7 @@ def test_request_validation_unknown_family():
 @pytest.mark.parametrize("kw", [
     dict(epsilon=-0.5), dict(num_chunks=0),
     dict(contraction_limit=1, initial_k=2), dict(cluster_iterations=0),
+    dict(contraction="gather"), dict(weights="dense"),
 ])
 def test_config_validate_rejects(kw):
     with pytest.raises(ValueError):
@@ -133,6 +149,19 @@ def test_dist_p1_matches_legacy_entrypoint(g):
                          devices=1))
     assert np.array_equal(res.assignment, want)
     assert res.feasible
+
+
+def test_dist_p1_sharded_owner_memory_model(g):
+    """The fully sharded memory model through the unchanged facade:
+    feasible, and its coarsen trace records the sharded exchange."""
+    res = Partitioner().run(
+        PartitionRequest(graph=g, k=4, config=CFG, backend="dist",
+                         devices=1, contraction="sharded",
+                         weights="owner"))
+    assert res.feasible
+    coarsen = [t for t in res.trace if t["phase"] == "dist-coarsen"]
+    assert coarsen and all(t["contraction"] == "sharded"
+                           and "exchange_s" in t for t in coarsen)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,105 @@
+"""Contraction invariants (paper §5), host and sharded.
+
+Property-style checks over random graphs and clusterings: contraction
+must preserve total vertex weight, produce no self loops, keep the arc
+list symmetric, and — the load-bearing one for multilevel correctness —
+the edge cut of any coarse partition must equal the cut of its
+projection onto the fine graph.
+
+The sharded path (``dist.dist_contraction``) runs here at P=1 in-process
+(shard_map over a single forced host device); multi-device coverage
+lives in test_distributed.py via the subprocess selftest
+(``--test contract``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.contraction import contract, dedup_arcs
+from repro.graphs import generators
+from repro.graphs.distribute import distribute_graph
+
+
+def _random_labels(rng, n, style):
+    if style == "coarse":          # ~n/8 clusters, contiguous-ish ids
+        return rng.integers(0, max(1, n // 8), size=n)
+    if style == "sparse_ids":      # arbitrary non-contiguous label values
+        return rng.choice(10 * n, size=max(1, n // 5),
+                          replace=False)[rng.integers(
+                              0, max(1, n // 5), size=n)]
+    return np.arange(n)            # identity: every vertex a singleton
+
+
+CASES = [("rgg2d", 800, "coarse"), ("rhg", 600, "coarse"),
+         ("ba", 500, "sparse_ids"), ("rgg2d", 300, "identity")]
+
+
+@pytest.mark.parametrize("family,n,style", CASES)
+def test_contract_invariants(family, n, style):
+    g = generators.make(family, n, 8.0, seed=13)
+    rng = np.random.default_rng(7)
+    labels = _random_labels(rng, g.n, style)
+    gc, mapping = contract(g, labels)
+    # mapping is a dense relabeling of the clustering
+    assert mapping.shape == (g.n,)
+    assert np.array_equal(np.unique(mapping), np.arange(gc.n))
+    # total vertex weight preserved
+    assert gc.total_vweight == g.total_vweight
+    # no self loops; symmetric arc list with positive weights
+    src = gc.arc_tails()
+    assert np.all(src != gc.adjncy)
+    gc.validate()
+    # cut of any coarse partition == cut of its fine projection
+    for k in (2, 5):
+        pc = rng.integers(0, k, size=gc.n)
+        assert metrics.edge_cut(gc, pc) == metrics.edge_cut(g, pc[mapping])
+
+
+def test_contract_merges_parallel_arcs():
+    """Two fine edges between the same cluster pair become one coarse
+    edge carrying the summed weight."""
+    from repro.graphs.format import from_coo
+    g = from_coo(4, np.array([0, 1, 0]), np.array([2, 3, 3]),
+                 eweights=np.array([5, 7, 11]))
+    gc, mapping = contract(g, np.array([0, 0, 1, 1]))
+    assert gc.n == 2 and gc.m == 2          # one undirected coarse edge
+    assert int(gc.eweights.sum()) == 2 * (5 + 7 + 11)
+    assert metrics.edge_cut(gc, np.array([0, 1])) == 23
+
+
+def test_dedup_arcs_kernel():
+    s, d, w = dedup_arcs(np.array([1, 0, 1, 1]), np.array([0, 1, 0, 1]),
+                         np.array([3, 4, 5, 9]))
+    # self loop (1,1) dropped, parallel (1,0) merged, sorted by (src,dst)
+    assert s.tolist() == [0, 1] and d.tolist() == [1, 0]
+    assert w.tolist() == [4, 8]
+    s, d, w = dedup_arcs(np.array([2]), np.array([2]), np.array([1]))
+    assert s.size == d.size == w.size == 0
+
+
+def test_dist_contract_matches_host_p1():
+    """P=1 in-process: the sharded pipeline (ownership, renumbering,
+    exchange, owner-side merge) must agree with the host kernel up to a
+    coarse-id bijection, and its coarse shards must round-trip."""
+    jax = pytest.importorskip("jax")
+    if len(jax.devices()) < 1:      # pragma: no cover
+        pytest.skip("no devices")
+    from repro.dist.dist_contraction import dist_contract
+    g = generators.make("rgg2d", 600, 8.0, seed=19)
+    rng = np.random.default_rng(23)
+    labels = rng.integers(0, 120, size=g.n)
+    res = dist_contract(distribute_graph(g, 1), labels)
+    gc_h, map_h = contract(g, labels)
+    assert res.graph.n == gc_h.n and res.graph.m == gc_h.m
+    assert res.graph.total_vweight == g.total_vweight
+    pairs = np.unique(np.stack([map_h, res.mapping], 1), axis=0)
+    assert pairs.shape[0] == gc_h.n
+    assert np.unique(pairs[:, 0]).size == gc_h.n
+    assert np.unique(pairs[:, 1]).size == gc_h.n
+    pc = rng.integers(0, 4, size=res.graph.n)
+    assert metrics.edge_cut(res.graph, pc) == \
+        metrics.edge_cut(g, pc[res.mapping])
+    # coarse shards carry the same graph the host view shows
+    valid = res.shards.local_gid < res.graph.n
+    assert int(res.shards.vweights[valid].sum()) == g.total_vweight
+    assert int((res.shards.arc_src < res.shards.n_loc).sum()) == res.graph.m

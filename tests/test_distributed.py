@@ -20,7 +20,7 @@ def run_selftest(*extra):
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.selftest", *extra],
-        capture_output=True, text=True, env=env, timeout=540)
+        capture_output=True, text=True, env=env, timeout=840)
     lines = [json.loads(l) for l in proc.stdout.splitlines()
              if l.startswith("{")]
     assert proc.returncode == 0, (proc.stdout, proc.stderr[-2000:])
@@ -54,6 +54,16 @@ def test_api_facade_2dev():
     assert all(r["pass"] for r in res), res
 
 
+def test_sharded_contract_2dev():
+    """Fast (non-slow) sharded-contraction coverage: hash ownership,
+    segmented all-to-all edge exchange and owner-side merge must agree
+    with the host kernel up to a coarse-id bijection on 2 devices."""
+    res = run_selftest("--devices", "2", "--n", "600", "--test",
+                       "contract")
+    assert len(res) == 2, res
+    assert all(r["pass"] for r in res), res
+
+
 @pytest.mark.slow
 def test_halo_8dev():
     """Ghost-vertex exchange must reproduce the single-process graph's
@@ -81,15 +91,29 @@ def test_dist_refine_8dev():
 
 
 @pytest.mark.slow
-def test_dist_partition_8dev():
-    res = run_selftest("--devices", "8", "--test", "partition",
+def test_dist_contract_8dev():
+    """Sharded contraction on a real 8-PE clustering: invariants, host
+    isomorphism, and grid-vs-direct equality of the edge exchange."""
+    res = run_selftest("--devices", "8", "--test", "contract",
                        "--n", "3000")
     assert all(r["pass"] for r in res), res
 
 
 @pytest.mark.slow
+def test_dist_partition_8dev():
+    """Covers both memory models: the default host/replicated pipeline
+    and the fully sharded one (contraction="sharded", weights="owner"),
+    each feasible and within the 1.5x quality bound."""
+    res = run_selftest("--devices", "8", "--test", "partition",
+                       "--n", "3000")
+    assert len(res) == 2, res
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
 def test_dist_partition_nonsquare_grid_6dev():
-    """6 PEs -> 2x3 grid routing."""
+    """6 PEs -> 2x3 grid routing, both memory models."""
     res = run_selftest("--devices", "6", "--test", "partition",
                        "--n", "2000", "--k", "4")
+    assert len(res) == 2, res
     assert all(r["pass"] for r in res), res
