@@ -9,6 +9,9 @@ Sections:
                    sharded/owner on forced devices, emits BENCH_dist.json
                    (per-level coarsen/exchange timings, peak replicated
                    bytes per PE)
+  balance        — host vs distributed balancer: rounds to feasibility,
+                   per-round time, bytes exchanged (gather vs pooled
+                   candidates), emits BENCH_balance.json
   quality        — Fig 2a/b: deep vs plain vs single-level LP edge cuts
   large_k        — Table 2: feasibility at large k
   balancer       — §4 Balancing: repair of adversarial imbalance
@@ -28,8 +31,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smallest instances (CI mode)")
-    ap.add_argument("--sections", default="api,dist,quality,large_k,"
-                    "balancer,kernels,scaling")
+    ap.add_argument("--sections", default="api,dist,balance,quality,"
+                    "large_k,balancer,kernels,scaling")
     args = ap.parse_args()
     sections = args.sections.split(",")
     print("name,us_per_call,derived")
@@ -40,6 +43,9 @@ def main() -> None:
     if "dist" in sections:
         from . import dist_bench
         dist_bench.run(fast=args.fast)
+    if "balance" in sections:
+        from . import balance_bench
+        balance_bench.run(fast=args.fast)
     if "quality" in sections:
         from . import quality
         quality.run(scale="small", ks=(2, 8, 32),

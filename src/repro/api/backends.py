@@ -15,8 +15,9 @@ Built-ins:
 
 The ``dist`` backends honor the request's distributed memory-model knobs
 (``contraction="host"|"sharded"``, ``weights="replicated"|"owner"``,
-docs/DIST.md) — they ride in through ``req.resolve_config()``, so no
-backend signature changes and no caller changes.
+``balance="host"|"dist"``, docs/DIST.md) — they ride in through
+``req.resolve_config()``, so no backend signature changes and no caller
+changes.
 
 The baselines being ordinary backends is what makes ``--compare`` "run
 the same request against N backends" instead of bespoke glue.

@@ -48,13 +48,17 @@ class PartitionRequest:
     """One partitioning job. ``backend="auto"`` lets the facade pick
     single vs. distributed from graph size and ``devices``.
 
-    ``contraction`` / ``weights`` select the distributed memory model
-    (see docs/DIST.md) on the ``dist`` / ``dist-grid`` backends without
-    spelling out a full config: ``contraction="sharded"`` contracts each
-    level in place (paper §5) instead of gathering to the host, and
-    ``weights="owner"`` shards the cluster/block weight tables across
-    PEs instead of replicating them. ``None`` defers to the preset or
-    explicit config; the single-process backends ignore both.
+    ``contraction`` / ``weights`` / ``balance`` select the distributed
+    memory model (see docs/DIST.md) on the ``dist`` / ``dist-grid``
+    backends without spelling out a full config:
+    ``contraction="sharded"`` contracts each level in place (paper §5)
+    instead of gathering to the host, ``weights="owner"`` shards the
+    cluster/block weight tables across PEs instead of replicating them,
+    and ``balance="dist"`` runs the exact balancer (and the coarsening
+    loop's cluster-weight enforcement) over the level's shards instead
+    of gathering every uncoarsening level to the host. ``None`` defers
+    to the preset or explicit config; the single-process backends ignore
+    all three.
     """
     graph: Union[Graph, GraphSpec]
     k: int
@@ -68,6 +72,7 @@ class PartitionRequest:
                                                 # O(m) cut pass per level
     contraction: Optional[str] = None           # "host" | "sharded"
     weights: Optional[str] = None               # "replicated" | "owner"
+    balance: Optional[str] = None               # "host" | "dist"
 
     def validate(self) -> "PartitionRequest":
         from .backends import available_backends
@@ -93,6 +98,9 @@ class PartitionRequest:
             raise ValueError(
                 f"weights must be 'replicated' or 'owner', "
                 f"got {self.weights!r}")
+        if self.balance not in (None, "host", "dist"):
+            raise ValueError(
+                f"balance must be 'host' or 'dist', got {self.balance!r}")
         if self.config is not None:
             self.config.validate()
         if isinstance(self.graph, GraphSpec):
@@ -106,7 +114,8 @@ class PartitionRequest:
 
     def resolve_config(self) -> PartitionerConfig:
         """Preset (+ epsilon/seed) unless an explicit config was given;
-        request-level ``contraction``/``weights`` override either."""
+        request-level ``contraction``/``weights``/``balance`` override
+        either."""
         cfg = resolve_config(self.preset, self.config, self.epsilon,
                              self.seed)
         overrides = {}
@@ -114,6 +123,8 @@ class PartitionRequest:
             overrides["contraction"] = self.contraction
         if self.weights is not None:
             overrides["weights"] = self.weights
+        if self.balance is not None:
+            overrides["balance"] = self.balance
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides).validate()
         return cfg

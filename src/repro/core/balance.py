@@ -17,11 +17,23 @@ cut reduction over targets that would not become overloaded. Moving to any
 *non-adjacent* block has g = -own_connection; the lightest such block is
 always a valid fallback because L_max >= c(V)/k + max_v c(v), which is what
 guarantees termination (feasibility is always reachable).
+
+The round is factored into two kernels shared with the distributed
+balancer (``dist.dist_balance``): ``balance_gains`` (per-vertex relative
+gains + targets over an arc slab — each PE runs it over its own shard)
+and ``greedy_select`` (the deterministic greedy application of a ranked
+candidate pool — run redundantly on every PE so no root/broadcast step
+is needed). Two historical host edge cases are fixed here: padded
+vertices can no longer enter the candidate pool (their zero relative
+gain used to displace real negative-gain candidates), and feasibility
+comparisons are arranged as ``w <= budget - c`` so they cannot wrap at
+the int32 boundary.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import time
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,26 +46,33 @@ from .lp import I32_MAX, _argmax_target, _group_conns, _own_connection
 NEG_INF = np.float32(-np.inf)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "top_m", "restricted"))
-def balance_round(labels, block_w, l_max, parent, src, dst, w, vweights,
-                  salt, *, n, top_m, restricted=False):
-    """One global balancing round. Returns (labels, block_w, still_overloaded).
+def balance_gains(lab_src_tab, s_src, s_lab, s_w, block_w, l_max, parent,
+                  vw_pad, salt, n, valid, restricted=False):
+    """Per-vertex relative gains + targets for one balancing round.
 
-    All arrays over vertices have size n+1 (sentinel slot n)."""
+    ``(s_src, s_lab, s_w)`` is the arc slab sorted by (src, label[dst]);
+    ``lab_src_tab``/``vw_pad``/``valid`` live over the (n+1,) src space
+    (slot n is the sentinel). ``valid`` masks real vertices — padded
+    slots must never enter the candidate pool. Returns ``(rel, tgt)``:
+    the paper's relative gain (NEG_INF where the vertex must not move)
+    and the chosen target block.
+
+    All weight comparisons are written ``w <= budget - c`` so that they
+    stay exact for totals at the int32 boundary (``w + c`` could wrap).
+    """
     k = block_w.shape[0]
     over = block_w > l_max
-    lab_dst = labels[dst]
-    s_src, s_lab, s_w = jax.lax.sort((src, lab_dst, w), num_keys=2)
     conn = _group_conns(s_src, s_lab, s_w)
-    own_lab = labels[s_src]
+    own_lab = lab_src_tab[s_src]
     # target must not become overloaded (fits) and differ from own block
-    fits = (block_w[s_lab] + vweights[s_src] <= l_max[s_lab])
-    valid = fits & (s_lab != own_lab)
+    fits = block_w[s_lab] <= l_max[s_lab] - vw_pad[s_src]
+    ok = fits & (s_lab != own_lab)
     if restricted:
-        valid &= parent[s_lab] == parent[own_lab]
-    score = jnp.where(valid, conn, -1)
-    best, target = _argmax_target(s_src, s_lab, score, block_w[s_lab], salt, n)
-    own_conn = _own_connection(s_src, s_lab, s_w, labels, n)
+        ok &= parent[s_lab] == parent[own_lab]
+    score = jnp.where(ok, conn, -1)
+    best, target = _argmax_target(s_src, s_lab, score, block_w[s_lab],
+                                  salt, n)
+    own_conn = _own_connection(s_src, s_lab, s_w, lab_src_tab, n)
 
     has_adj = (best >= 0) & (target < I32_MAX)
     tgt_adj = jnp.where(has_adj, target, 0)
@@ -66,38 +85,68 @@ def balance_round(labels, block_w, l_max, parent, src, dst, w, vweights,
         is_min = block_w == grp_min[parent]
         bid = jnp.where(is_min, jnp.arange(k, dtype=jnp.int32), I32_MAX)
         grp_argmin = jax.ops.segment_min(bid, parent, num_segments=k)
-        fb_t = grp_argmin[parent[labels]]
+        fb_t = grp_argmin[parent[lab_src_tab]]
     else:
         fb_t = jnp.full((n + 1,), jnp.argmin(block_w).astype(jnp.int32))
-    fb_ok = (block_w[fb_t] + vweights <= l_max[fb_t]) & (fb_t != labels)
+    fb_ok = (block_w[fb_t] <= l_max[fb_t] - vw_pad) & (fb_t != lab_src_tab)
     gain_fb = -own_conn
 
-    use_adj = has_adj
-    tgt = jnp.where(use_adj, tgt_adj, fb_t)
-    g = jnp.where(use_adj, gain_adj, gain_fb)
-    movable = over[labels] & (has_adj | fb_ok)
-    movable = movable.at[n].set(False)
+    tgt = jnp.where(has_adj, tgt_adj, fb_t)
+    g = jnp.where(has_adj, gain_adj, gain_fb)
+    movable = over[lab_src_tab] & (has_adj | fb_ok) & valid
 
     gf = g.astype(jnp.float32)
-    cv = jnp.maximum(vweights.astype(jnp.float32), 1.0)
+    cv = jnp.maximum(vw_pad.astype(jnp.float32), 1.0)
     rel = jnp.where(g >= 0, gf * cv, gf / cv)
     rel = jnp.where(movable, rel, NEG_INF)
-    vals, vidx = jax.lax.top_k(rel, top_m)
+    return rel, tgt
+
+
+def greedy_select(vals, tgt_blk, src_blk, cand_w, block_w, l_max):
+    """Deterministic greedy application of a ranked candidate pool.
+
+    The pool arrays must already be ordered by descending relative gain
+    (ties by ascending vertex id); every PE of the distributed balancer
+    runs this redundantly over the identical gathered pool, so accept
+    decisions agree everywhere without a root/broadcast step. Returns
+    ``(accept, block_w)``.
+    """
+    m = vals.shape[0]
 
     def body(i, carry):
-        block_w, labels = carry
-        v = vidx[i]
-        t = tgt[v]
-        b = labels[v]
-        cw = vweights[v]
+        block_w, accept = carry
+        t = tgt_blk[i]
+        b = src_blk[i]
+        cw = cand_w[i]
         ok = (vals[i] > NEG_INF) & (block_w[b] > l_max[b]) & \
-             (block_w[t] + cw <= l_max[t]) & (t != b)
+             (block_w[t] <= l_max[t] - cw) & (t != b)
         cwd = jnp.where(ok, cw, 0)
         block_w = block_w.at[b].add(-cwd).at[t].add(cwd)
-        labels = labels.at[v].set(jnp.where(ok, t, b))
-        return block_w, labels
+        accept = accept.at[i].set(ok)
+        return block_w, accept
 
-    block_w, labels = jax.lax.fori_loop(0, top_m, body, (block_w, labels))
+    block_w, accept = jax.lax.fori_loop(
+        0, m, body, (block_w, jnp.zeros((m,), jnp.bool_)))
+    return accept, block_w
+
+
+@functools.partial(jax.jit, static_argnames=("n", "top_m", "restricted"))
+def balance_round(labels, block_w, l_max, parent, src, dst, w, vweights,
+                  valid, salt, *, n, top_m, restricted=False):
+    """One global balancing round. Returns (labels, block_w, still_overloaded).
+
+    All arrays over vertices have size n+1 (sentinel slot n); ``valid``
+    marks the real vertices among them."""
+    lab_dst = labels[dst]
+    s_src, s_lab, s_w = jax.lax.sort((src, lab_dst, w), num_keys=2)
+    rel, tgt = balance_gains(labels, s_src, s_lab, s_w, block_w, l_max,
+                             parent, vweights, salt, n, valid,
+                             restricted=restricted)
+    vals, vidx = jax.lax.top_k(rel, top_m)
+    accept, block_w = greedy_select(vals, tgt[vidx], labels[vidx],
+                                    vweights[vidx], block_w, l_max)
+    labels = labels.at[vidx].set(
+        jnp.where(accept, tgt[vidx], labels[vidx]))
     return labels, block_w, jnp.any(block_w > l_max)
 
 
@@ -107,11 +156,27 @@ def rebalance(g: Graph,
               parent: Optional[np.ndarray] = None,
               top_m: int = 128,
               max_rounds: int = 200,
-              seed: int = 0) -> np.ndarray:
+              seed: int = 0,
+              stats: Optional[Dict] = None) -> np.ndarray:
     """Host driver: run balance rounds until feasible. ``part`` is (n,) block
-    ids; ``l_max_vec`` is (k,) per-block budgets."""
+    ids; ``l_max_vec`` is (k,) per-block budgets.
+
+    Already-feasible partitions return immediately without building the
+    O(m) chunk slabs or touching a device. ``stats``, when given, receives
+    ``rounds`` / ``time_s`` / ``gather_bytes`` for benchmarks.
+    """
     n = g.n
     k = int(l_max_vec.shape[0])
+    t_start = time.perf_counter()
+    from . import metrics
+    block_w = metrics.block_weights(g, part, k)
+    if not bool(np.any(block_w > l_max_vec)):
+        if stats is not None:
+            stats.update(rounds=0, gather_bytes=0,
+                         time_s=time.perf_counter() - t_start)
+        return np.array(part, dtype=np.int64)   # fresh array, never a view
+    # build_chunks raises a clear ValueError for totals >= 2^31 (the
+    # int32 jit path would wrap)
     chunks = lp.build_chunks(g, 1)
     n_pad = chunks.n_pad
     top_m = min(top_m, n_pad + 1)
@@ -120,24 +185,30 @@ def rebalance(g: Graph,
     vw = np.zeros(n_pad + 1, dtype=np.int32)
     vw[:n] = g.vweights
     from .refinement import pad_blocks
-    block_w = np.zeros(k, dtype=np.int64)
-    np.add.at(block_w, part, g.vweights)
     bw_p, lv_p, pr_p, _ = pad_blocks(block_w, l_max_vec, parent)
     labels = jnp.asarray(labels)
     vw_j = jnp.asarray(vw)
     block_w = jnp.asarray(bw_p)
     l_max_j = jnp.asarray(lv_p)
     parent_j = jnp.asarray(pr_p)
+    valid = jnp.asarray(np.arange(n_pad + 1) < n)
     restricted = parent is not None
     src = jnp.asarray(chunks.src[0])
     dst = jnp.asarray(chunks.dst[0])
     w = jnp.asarray(chunks.w[0])
-    if bool(np.any(np.asarray(block_w) > np.asarray(l_max_j))):
-        for r in range(max_rounds):
-            labels, block_w, overloaded = balance_round(
-                labels, block_w, l_max_j, parent_j, src, dst, w, vw_j,
-                jnp.uint32((seed * 7919 + r) % (2**32)), n=n_pad, top_m=top_m,
-                restricted=restricted)
-            if not bool(overloaded):
-                break
+    rounds = 0
+    for r in range(max_rounds):
+        labels, block_w, overloaded = balance_round(
+            labels, block_w, l_max_j, parent_j, src, dst, w, vw_j, valid,
+            jnp.uint32((seed * 7919 + r) % (2**32)), n=n_pad, top_m=top_m,
+            restricted=restricted)
+        rounds = r + 1
+        if not bool(overloaded):
+            break
+    if stats is not None:
+        # the host balancer pays one O(m) single-chunk gather up front
+        stats.update(rounds=rounds,
+                     gather_bytes=int(chunks.src.nbytes + chunks.dst.nbytes
+                                      + chunks.w.nbytes),
+                     time_s=time.perf_counter() - t_start)
     return np.asarray(labels)[:n].astype(np.int64)

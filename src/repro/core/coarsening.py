@@ -18,16 +18,22 @@ from ..graphs.format import Graph, degree_bucket_order, permute
 from . import lp
 
 
-def enforce_cluster_weights(labels: np.ndarray, vweights: np.ndarray,
-                            max_weight: int) -> np.ndarray:
-    """Eject members of overweight clusters into fresh singleton clusters
-    until every multi-member cluster fits. One exact pass."""
+def ejection_candidates(labels: np.ndarray, vweights: np.ndarray,
+                        max_weight: int) -> np.ndarray:
+    """Vertices that must leave their overweight cluster, under the
+    deterministic keep-heaviest-first-prefix rule: members sort by
+    (cluster, -weight, id) and a member is ejected once the cumulative
+    kept weight including it exceeds ``max_weight`` — except each
+    cluster's first (heaviest) member, since singletons may legitimately
+    exceed W. This is the shared decision rule: the sharded enforcement
+    (``dist.dist_balance.dist_enforce_cluster_weights``) runs the same
+    sort owner-side and must eject the identical vertex set."""
     n = labels.shape[0]
     cw = np.zeros(n, dtype=np.int64)
     np.add.at(cw, labels, vweights)
     over = cw > max_weight
     if not over.any():
-        return labels
+        return np.empty(0, dtype=np.int64)
     members = np.flatnonzero(over[labels])
     # keep heaviest-first prefix per cluster (fewest ejections)
     order = np.lexsort((members, -vweights[members], labels[members]))
@@ -39,11 +45,16 @@ def enforce_cluster_weights(labels: np.ndarray, vweights: np.ndarray,
     gstart = np.flatnonzero(starts)
     base = (csum[gstart] - sw[gstart])[gidx]
     within = csum - base
-    eject = within > max_weight
-    # never eject a cluster's first (heaviest) member — singletons may
-    # legitimately exceed W
-    eject &= ~starts
-    ej = members[order][eject]
+    eject = (within > max_weight) & ~starts
+    return members[order][eject].astype(np.int64)
+
+
+def enforce_cluster_weights(labels: np.ndarray, vweights: np.ndarray,
+                            max_weight: int) -> np.ndarray:
+    """Eject members of overweight clusters into fresh singleton clusters
+    until every multi-member cluster fits. One exact pass."""
+    n = labels.shape[0]
+    ej = ejection_candidates(labels, vweights, max_weight)
     if ej.size == 0:
         return labels
     used = np.zeros(n, dtype=bool)

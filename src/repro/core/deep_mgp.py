@@ -39,10 +39,12 @@ class PartitionerConfig:
     min_shrink: float = 0.95               # stop coarsening if n_c/n above
     seed: int = 0
     # distributed-backend knobs (ignored by the single-process driver):
-    # where each level contracts and how cluster/block weight tables are
-    # laid out across PEs — see docs/DIST.md for the memory model
+    # where each level contracts, how cluster/block weight tables are
+    # laid out across PEs, and where balancing runs during uncoarsening
+    # and coarsening — see docs/DIST.md for the memory model
     contraction: str = "host"              # "host" | "sharded"
     weights: str = "replicated"            # "replicated" | "owner"
+    balance: str = "host"                  # "host" | "dist"
 
     def validate(self) -> "PartitionerConfig":
         """Reject configurations that would only fail later as opaque
@@ -74,6 +76,9 @@ class PartitionerConfig:
             raise ValueError(
                 f"weights must be 'replicated' or 'owner', "
                 f"got {self.weights!r}")
+        if self.balance not in ("host", "dist"):
+            raise ValueError(
+                f"balance must be 'host' or 'dist', got {self.balance!r}")
         return self
 
 
@@ -91,6 +96,21 @@ def trace_event(trace: Optional[List[Dict]], **record) -> None:
 
 def ceil2(x: int) -> int:
     return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+def uncoarsen_seed(base_seed: int, lvl: int, stream: int = 0) -> int:
+    """Per-level refinement/balancer seed during uncoarsening.
+
+    Derived from the level *index*, never from the level's vertex count:
+    the historical ``seed + n % 1000003`` collided whenever two hierarchy
+    levels had equal n (possible near the min_shrink exit), correlating
+    LP and balancer tie-breaking across levels. ``stream`` separates
+    independent uncoarsening loops that share one base seed — the
+    distributed driver (stream 1) delegates its base case to this
+    driver (stream 0), and both count levels from 0; the 500009 offset
+    is not a multiple of the 1000003 level stride, so no (stream, lvl)
+    pair collides with another."""
+    return base_seed + stream * 500009 + (lvl + 1) * 1000003
 
 
 def _l_vec(block_k: np.ndarray, l_final: int) -> np.ndarray:
@@ -233,7 +253,7 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
         part = balance_and_refine(Gf, part, _l_vec(block_k, l_final),
                                   num_iterations=cfg.refine_iterations,
                                   num_chunks=cfg.num_chunks,
-                                  seed=cfg.seed + Gf.n % 1000003)
+                                  seed=uncoarsen_seed(cfg.seed, lvl))
         if trace is not None:
             trace_event(trace, phase="uncoarsen", level=lvl, n=Gf.n,
                         m=Gf.m, blocks=int(block_k.shape[0]),

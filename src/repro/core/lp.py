@@ -56,8 +56,12 @@ def _next_pow2(x: int) -> int:
 
 
 def build_chunks(g: Graph, num_chunks: int, pad_shapes: bool = True) -> LPChunks:
-    assert g.total_eweight < 2**31 and g.total_vweight < 2**31, \
-        "int32 jit path requires total weights < 2^31"
+    if g.total_eweight >= 2**31 or g.total_vweight >= 2**31:
+        # a real error, not an assert: asserts vanish under ``python -O``
+        # and the int32 tables would then silently wrap
+        raise ValueError(
+            f"build_chunks: total vertex/edge weight ({g.total_vweight}/"
+            f"{g.total_eweight}) must be < 2^31 for the int32 jit path")
     n, m = g.n, g.m
     n_pad = _next_pow2(n) if pad_shapes else n
     B = max(1, min(num_chunks, max(1, n)))
@@ -253,7 +257,9 @@ def _refine_chunk(labels, block_w, l_max, parent, chunk_src, chunk_dst,
     conn = _group_conns(s_src, s_lab, s_w)
     own_lab = labels[s_src]
     staying = s_lab == own_lab
-    fits = (block_w[s_lab] + vweights[s_src] <= l_max[s_lab]) & ~staying
+    # weight comparisons arranged as ``w <= budget - c`` so they cannot
+    # wrap when the totals approach the int32 boundary
+    fits = (block_w[s_lab] <= l_max[s_lab] - vweights[s_src]) & ~staying
     if restricted:
         fits &= parent[s_lab] == parent[own_lab]
     score = jnp.where(fits, conn, -1)
@@ -264,7 +270,7 @@ def _refine_chunk(labels, block_w, l_max, parent, chunk_src, chunk_dst,
     tgt_safe = jnp.where(target < I32_MAX, target, 0)
     # move on strict gain; zero-gain moves only if they strictly improve
     # balance (paper: ties broken in favor of the lighter block)
-    lighter = block_w[tgt_safe] + vweights < block_w[labels]
+    lighter = block_w[tgt_safe] < block_w[labels] - vweights
     move = (target < I32_MAX) & (best >= 0) & \
         ((gain > 0) | ((gain == 0) & lighter))
     move = move.at[n].set(False)

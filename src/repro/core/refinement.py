@@ -10,7 +10,6 @@ from ..graphs.format import Graph, degree_bucket_order, permute
 from . import balance as bal
 from . import lp
 
-_BIG_W = np.int32(2**30)
 _BIG_L = np.int32(2**31 - 1)
 
 
@@ -19,16 +18,31 @@ def pad_blocks(block_w: np.ndarray, l_max_vec: np.ndarray,
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Pad the block count to a power-of-two bucket (>= min_bucket) with
     unreachable dummy blocks so jitted programs are shared across k:
-    dummies are heavy (never the lightest fallback), have infinite budget
-    (never overloaded) and are adjacent to no vertex (never a target)."""
+    dummies carry the maximal int32 weight (so ``argmin`` never picks one
+    as the balancer's lightest-block fallback — with the historical 2^30
+    filler a dummy *could* win once every real block exceeded 2^30, and
+    the balancer then emitted block ids >= k), have the same maximal
+    budget (never overloaded, never a fitting target) and are adjacent to
+    no vertex (never an adjacency target).
+
+    Block weights must fit int32 — the jit tables are int32 throughout —
+    so overlarge totals raise a ``ValueError`` instead of silently
+    wrapping (the historical cast inverted the ``block_w > l_max``
+    overload test)."""
     k = int(block_w.shape[0])
+    if np.any(block_w.astype(np.int64) > int(_BIG_L)) or \
+            np.any(block_w.astype(np.int64) < 0):
+        raise ValueError(
+            f"pad_blocks: block weights must fit int32 (max "
+            f"{int(block_w.max())}); totals >= 2^31 are not supported by "
+            "the int32 jit path")
     k_pad = max(min_bucket, 1 << max(0, (k - 1)).bit_length())
     if k_pad == k:
         p = parent if parent is not None else np.arange(k)
         return (block_w.astype(np.int32),
                 np.minimum(l_max_vec, _BIG_L).astype(np.int32),
                 p.astype(np.int32), k)
-    bw = np.full(k_pad, _BIG_W, dtype=np.int32)
+    bw = np.full(k_pad, _BIG_L, dtype=np.int32)
     bw[:k] = block_w
     lv = np.full(k_pad, _BIG_L, dtype=np.int32)
     lv[:k] = np.minimum(l_max_vec, _BIG_L)

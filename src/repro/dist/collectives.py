@@ -77,12 +77,15 @@ def all_to_all(slab: jnp.ndarray, axis_name: str, P: int,
 
 def all_gather_1d(shard: jnp.ndarray, axis_name: str, P: int,
                   use_grid: bool = False) -> jnp.ndarray:
-    """Concatenate the (S,) owner shards of all P PEs into the dense
-    (P*S,) table (every PE receives the same array).
+    """Concatenate the (S, ...) owner shards of all P PEs along the
+    leading axis into the dense (P*S, ...) table (every PE receives the
+    same array).
 
-    The read half of the owner-sharded weight protocol: persistent state
-    stays O(S) per PE; the dense view exists only transiently inside the
-    chunk body. Grid routing gathers within grid rows, then columns —
+    The read half of the owner-sharded weight protocol, and the pool
+    combiner of the distributed balancer (each PE contributes its
+    (top_m, fields) candidate records). Persistent state stays O(S) per
+    PE; the dense view exists only transiently inside the chunk/round
+    body. Grid routing gathers within grid rows, then columns —
     bit-identical to the direct gather.
     """
     if not use_grid:
@@ -94,7 +97,7 @@ def all_gather_1d(shard: jnp.ndarray, axis_name: str, P: int,
     col_groups = [[r * b + c for r in range(a)] for c in range(b)]
     m = lax.all_gather(shard, axis_name, axis_index_groups=row_groups)
     m = lax.all_gather(m, axis_name, axis_index_groups=col_groups)
-    return m.reshape(P * shard.shape[0])
+    return m.reshape((P * shard.shape[0],) + shard.shape[1:])
 
 
 def psum_scatter_1d(dense: jnp.ndarray, axis_name: str, P: int,

@@ -72,11 +72,14 @@ def owner_table_width(num_labels: int, P: int) -> int:
 
 def _check_int32_weights(shards: GraphShards) -> None:
     """Same guard as core.lp.build_chunks: the replicated int32 weight
-    tables (psum-accumulated) must never wrap."""
+    tables (psum-accumulated) must never wrap. A real error, not an
+    assert — asserts vanish under ``python -O``."""
     tot_v = int(shards.vweights.astype(np.int64).sum())
     tot_e = int(shards.arc_w.astype(np.int64).sum())
-    assert tot_v < 2**31 and tot_e < 2**31, \
-        "int32 jit path requires total weights < 2^31"
+    if tot_v >= 2**31 or tot_e >= 2**31:
+        raise ValueError(
+            f"dist_lp: total vertex/edge weight ({tot_v}/{tot_e}) must "
+            "be < 2^31 for the int32 jit path")
 
 
 def make_mesh_1d(P: int) -> Mesh:
@@ -110,7 +113,8 @@ def _local_moves(lab_src_tab, tab, cw_like, budget_like, vw_pad,
     conn = _group_conns(s_src, s_lab, s_w)
     own_lab = lab_src_tab[s_src]
     staying = s_lab == own_lab
-    fits = cw_like[s_lab] + vw_pad[s_src] <= budget_like[s_lab]
+    # ``w <= budget - c`` form: exact at the int32 boundary (w + c wraps)
+    fits = cw_like[s_lab] <= budget_like[s_lab] - vw_pad[s_src]
     if cluster_mode:
         fits = fits | staying
     else:
@@ -126,7 +130,7 @@ def _local_moves(lab_src_tab, tab, cw_like, budget_like, vw_pad,
             (target < I32_MAX) & (best > 0)
     else:
         gain = best - own_conn
-        lighter = cw_like[tgt_safe] + vw_pad < cw_like[lab_cur]
+        lighter = cw_like[tgt_safe] < cw_like[lab_cur] - vw_pad
         move = (target < I32_MAX) & (best >= 0) & \
             ((gain > 0) | ((gain == 0) & lighter))
     move = move.at[n_loc].set(False)

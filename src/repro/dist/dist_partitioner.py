@@ -33,9 +33,11 @@ from ..core.balance import rebalance
 from ..core.coarsening import enforce_cluster_weights
 from ..core.contraction import contract
 from ..core.deep_mgp import (PartitionerConfig, check_k,
-                             partition as sp_partition, trace_event)
+                             partition as sp_partition, trace_event,
+                             uncoarsen_seed)
 from ..graphs.distribute import GraphShards, distribute_graph
 from ..graphs.format import Graph
+from .dist_balance import dist_enforce_cluster_weights, dist_rebalance
 from .dist_contraction import dist_contract
 from .dist_lp import dist_cluster, dist_lp_refine
 
@@ -50,12 +52,22 @@ def dist_refine_and_balance(g: Graph,
                             use_grid: bool = True,
                             mesh=None,
                             shards: Optional[GraphShards] = None,
-                            weights: str = "replicated") -> np.ndarray:
+                            weights: str = "replicated",
+                            balance: str = "host",
+                            balance_stats: Optional[Dict] = None
+                            ) -> np.ndarray:
     """Distributed BalanceAndRefine: sharded LP refinement (block weights
     replicated or owner-sharded per ``weights``, races bounced) followed
     by the exact global balancer so the result always satisfies the
     per-block budgets. ``shards`` lets the driver pass the level's
-    existing distribution instead of re-sharding ``g``."""
+    existing distribution instead of re-sharding ``g``.
+
+    ``balance`` picks where the exact balancer runs: ``"host"`` gathers
+    the level into ``core.balance.rebalance``'s single-chunk arc slab
+    (one O(m) gather per call), ``"dist"`` runs
+    ``dist_balance.dist_rebalance`` over the same shards the refinement
+    used — no host gather, O(P·top_m) pooled candidates per round,
+    bit-identical to ``"host"`` at P=1."""
     part = np.asarray(part, dtype=np.int64)
     l_max_vec = np.asarray(l_max_vec, dtype=np.int64)
     if shards is None:
@@ -64,7 +76,13 @@ def dist_refine_and_balance(g: Graph,
                           num_iterations=num_iterations,
                           num_chunks=num_chunks, seed=seed,
                           use_grid=use_grid, mesh=mesh, weights=weights)
-    part = rebalance(g, part, l_max_vec, seed=seed + 1)
+    if balance == "dist":
+        part = dist_rebalance(shards, part, l_max_vec, seed=seed + 1,
+                              use_grid=use_grid, mesh=mesh,
+                              weights=weights, stats=balance_stats)
+    else:
+        part = rebalance(g, part, l_max_vec, seed=seed + 1,
+                         stats=balance_stats)
     return part
 
 
@@ -112,7 +130,15 @@ def dist_partition_impl(g: Graph,
                               num_chunks=cfg.num_chunks,
                               seed=cfg.seed + level, use_grid=use_grid,
                               mesh=mesh, weights=cfg.weights)
-        labels = enforce_cluster_weights(labels, np.asarray(G.vweights), W)
+        if cfg.balance == "dist":
+            # coarsening-side balancing stays sharded: the exact
+            # eject-to-singleton sweep runs owner-side instead of
+            # round-tripping the labels through host numpy
+            labels = dist_enforce_cluster_weights(
+                shards, labels, W, use_grid=use_grid, mesh=mesh)
+        else:
+            labels = enforce_cluster_weights(labels,
+                                             np.asarray(G.vweights), W)
         if cfg.contraction == "sharded":
             res = dist_contract(shards, labels, use_grid=use_grid,
                                 mesh=mesh)
@@ -148,14 +174,19 @@ def dist_partition_impl(g: Graph,
     for lvl, (Gf, mapping, fshards) in enumerate(reversed(hierarchy)):
         t0 = time.perf_counter()
         part = part[mapping]
+        lvl_seed = uncoarsen_seed(cfg.seed, lvl, stream=1)
+        bal_stats: Dict = {}
         part = dist_refine_and_balance(
             Gf, part, lvec, P, num_iterations=cfg.refine_iterations,
             num_chunks=cfg.num_chunks,
-            seed=cfg.seed + Gf.n % 1000003, use_grid=use_grid, mesh=mesh,
-            shards=fshards, weights=cfg.weights)
+            seed=lvl_seed, use_grid=use_grid, mesh=mesh,
+            shards=fshards, weights=cfg.weights, balance=cfg.balance,
+            balance_stats=bal_stats)
         if trace is not None:
             trace_event(trace, phase="dist-uncoarsen", level=lvl, n=Gf.n,
-                        m=Gf.m, blocks=k, P=P,
+                        m=Gf.m, blocks=k, P=P, seed=lvl_seed,
+                        balance=cfg.balance,
+                        balance_rounds=bal_stats.get("rounds"),
                         cut=metrics.edge_cut(Gf, part),
                         time_s=round(time.perf_counter() - t0, 6))
     return part

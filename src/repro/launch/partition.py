@@ -46,6 +46,12 @@ def main() -> int:
                     choices=["replicated", "owner"],
                     help="dist-backend weight tables: psum-replicated or "
                          "owner-sharded (O(n/P + k) per PE)")
+    ap.add_argument("--balance", default=None,
+                    choices=["host", "dist"],
+                    help="dist-backend balancer: gather each uncoarsening "
+                         "level to the host (host) or run the pooled "
+                         "greedy balancer over the level's shards (dist) "
+                         "— docs/DIST.md")
     ap.add_argument("--trace", action="store_true",
                     help="also print the per-level trace records")
     args = ap.parse_args()
@@ -64,7 +70,8 @@ def main() -> int:
         k=args.k, epsilon=args.epsilon, preset=args.preset,
         seed=args.seed, backend=args.backend,
         devices=args.devices or 1,
-        contraction=args.contraction, weights=args.weights)
+        contraction=args.contraction, weights=args.weights,
+        balance=args.balance)
     engine = Partitioner()
     res = engine.run(req)
     print(json.dumps(res.summary()))

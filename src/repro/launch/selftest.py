@@ -9,8 +9,12 @@ implementation against the single-process reference: collectives
 round-trip, distributed clustering validity (replicated and
 owner-sharded weight tables), sharded contraction invariants
 (``--test contract``), distributed partition feasibility + quality
-under both memory models, grid vs direct all-to-all equivalence, and
-the ``repro.api`` facade (old-vs-new equality, batched sessions).
+under both memory models, the distributed balancer (``--test balance``:
+P=1 bit-identity with the host balancer, adversarial-start feasibility,
+sharded cluster-weight enforcement, and the no-host-gather trace
+assertion for ``balance="dist"``), grid vs direct all-to-all
+equivalence, and the ``repro.api`` facade (old-vs-new equality, batched
+sessions).
 Prints one JSON line per test; exit code 0 iff all pass.
 """
 import argparse
@@ -23,8 +27,8 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
-                             "contract", "partition", "refine", "smoke",
-                             "api"])
+                             "contract", "partition", "refine", "balance",
+                             "smoke", "api"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -197,6 +201,116 @@ def main() -> int:
         feas = metrics.is_feasible(g, part1, args.k, 0.03)
         report("refine.dist", feas and cut1 < cut0, cut_before=cut0,
                cut_after=cut1, feasible=feas)
+
+    if args.test in ("all", "balance"):
+        import dataclasses
+        from repro.core.balance import rebalance
+        from repro.core.coarsening import (ejection_candidates,
+                                           enforce_cluster_weights)
+        from repro.dist import dist_partitioner as dp
+        from repro.dist.dist_balance import (dist_enforce_cluster_weights,
+                                             dist_rebalance)
+
+        lmax = np.full(args.k, metrics.l_max(
+            g.total_vweight, args.k, 0.03, int(g.vweights.max())),
+            dtype=np.int64)
+        part0 = np.zeros(g.n, dtype=np.int64)   # adversarial: one block
+
+        # distributed balancer == host balancer, bit for bit, at P=1
+        sh1 = distribute_graph(g, 1)
+        want = rebalance(g, part0.copy(), lmax, seed=11)
+        got = dist_rebalance(sh1, part0.copy(), lmax, seed=11,
+                             use_grid=False)
+        report("balance.p1_bit_identical", np.array_equal(want, got))
+
+        # P devices: feasibility from the adversarial start, identical
+        # labels across routing and weight-table layouts
+        shP = distribute_graph(g, P)
+        bstats = {}
+        fixed = dist_rebalance(shP, part0.copy(), lmax, seed=11,
+                               use_grid=True, stats=bstats)
+        bw = np.zeros(args.k, dtype=np.int64)
+        np.add.at(bw, fixed, g.vweights)
+        report("balance.dist_adversarial", bool(np.all(bw <= lmax)),
+               rounds=bstats["rounds"], pool_bytes=bstats["pool_bytes"])
+        fixed_d = dist_rebalance(shP, part0.copy(), lmax, seed=11,
+                                 use_grid=False)
+        fixed_o = dist_rebalance(shP, part0.copy(), lmax, seed=11,
+                                 use_grid=True, weights="owner")
+        report("balance.grid_owner_equal",
+               np.array_equal(fixed, fixed_d) and
+               np.array_equal(fixed, fixed_o))
+
+        # heterogeneous per-block budgets stay exactly enforced
+        lvec = lmax * (1 + (np.arange(args.k) % 2))
+        fixed_h = dist_rebalance(shP, part0.copy(), lvec, seed=13,
+                                 use_grid=True)
+        bwh = np.zeros(args.k, dtype=np.int64)
+        np.add.at(bwh, fixed_h, g.vweights)
+        report("balance.heterogeneous_lmax", bool(np.all(bwh <= lvec)))
+
+        # sharded cluster-weight enforcement ejects the same vertex set
+        # as the host sweep and yields the same clustering up to a
+        # relabeling of the fresh singletons
+        rng = np.random.default_rng(7)
+        labels = rng.integers(0, max(2, args.k), g.n).astype(np.int64)
+        W = max(1, int(g.total_vweight / (4 * args.k)))
+        lab_d = dist_enforce_cluster_weights(shP, labels, W, use_grid=True)
+        ej = ejection_candidates(labels, np.asarray(g.vweights), W)
+        same_set = np.array_equal(np.sort(np.flatnonzero(lab_d != labels)),
+                                  np.sort(ej))
+
+        def canon(lab):
+            _, inv = np.unique(lab, return_inverse=True)
+            first = np.full(int(inv.max()) + 1, g.n, dtype=np.int64)
+            np.minimum.at(first, inv, np.arange(g.n))
+            return first[inv]
+
+        lab_h = enforce_cluster_weights(labels.copy(),
+                                        np.asarray(g.vweights), W)
+        report("balance.enforce_sharded", same_set and
+               np.array_equal(canon(lab_d), canon(lab_h)),
+               ejected=int(ej.size))
+
+        # full uncoarsening path with balance="dist": *no* host-side
+        # rebalance gather (trace assertion via an instrumented counter),
+        # feasible, and within the 1.5x quality bound — both weight-table
+        # layouts
+        ref_cut = metrics.edge_cut(g, partition(g, args.k, cfg))
+        calls = {"n": 0}
+        orig_rebalance = dp.rebalance
+
+        def counting_rebalance(*a, **kw):
+            calls["n"] += 1
+            return orig_rebalance(*a, **kw)
+
+        dp.rebalance = counting_rebalance
+        try:
+            for wmode in ("replicated", "owner"):
+                calls["n"] = 0
+                cfg_b = dataclasses.replace(
+                    cfg, balance="dist", weights=wmode,
+                    contraction="sharded" if wmode == "owner" else "host")
+                tr = []
+                part_b = dp.dist_partition_impl(g, args.k, P, cfg=cfg_b,
+                                                trace=tr)
+                s_b = metrics.summarize(g, part_b, args.k, 0.03)
+                seeds = [t["seed"] for t in tr
+                         if t["phase"] == "dist-uncoarsen"]
+                levels = len(seeds)
+                report(f"balance.no_host_gather_{wmode}",
+                       s_b["feasible"] and calls["n"] == 0 and
+                       levels >= 1 and len(set(seeds)) == levels and
+                       s_b["cut"] <= max(1.5 * ref_cut, ref_cut + 50),
+                       cut=s_b["cut"], ref_cut=ref_cut, levels=levels,
+                       host_rebalance_calls=calls["n"])
+            # instrumentation sanity: the host mode *does* hit the counter
+            calls["n"] = 0
+            dp.dist_partition_impl(g, args.k, P, cfg=cfg)
+            report("balance.host_gather_counter_sane", calls["n"] >= 1,
+                   host_rebalance_calls=calls["n"])
+        finally:
+            dp.rebalance = orig_rebalance
 
     if args.test in ("all", "partition"):
         import dataclasses

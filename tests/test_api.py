@@ -82,6 +82,7 @@ def test_register_backend_roundtrip(g):
     dict(k=0), dict(k=-3), dict(epsilon=0.0), dict(epsilon=-1.0),
     dict(devices=0), dict(preset="turbo"), dict(backend="nope"),
     dict(contraction="gather"), dict(weights="dense"),
+    dict(balance="gathered"),
 ])
 def test_request_validation_rejects(kw, g):
     base = dict(graph=g, k=8)
@@ -91,13 +92,16 @@ def test_request_validation_rejects(kw, g):
 
 
 def test_request_memory_model_overrides(g):
-    """contraction/weights ride into the resolved config; None defers."""
+    """contraction/weights/balance ride into the resolved config; None
+    defers."""
     req = PartitionRequest(graph=g, k=8, contraction="sharded",
-                           weights="owner").validate()
+                           weights="owner", balance="dist").validate()
     cfg = req.resolve_config()
     assert cfg.contraction == "sharded" and cfg.weights == "owner"
+    assert cfg.balance == "dist"
     base = PartitionRequest(graph=g, k=8).resolve_config()
     assert base.contraction == "host" and base.weights == "replicated"
+    assert base.balance == "host"
     # an explicit config is still overridden by request-level knobs
     cfg2 = PartitionRequest(graph=g, k=8, config=CFG,
                             weights="owner").resolve_config()
@@ -113,6 +117,7 @@ def test_request_validation_unknown_family():
     dict(epsilon=-0.5), dict(num_chunks=0),
     dict(contraction_limit=1, initial_k=2), dict(cluster_iterations=0),
     dict(contraction="gather"), dict(weights="dense"),
+    dict(balance="gathered"),
 ])
 def test_config_validate_rejects(kw):
     with pytest.raises(ValueError):

@@ -64,6 +64,17 @@ def test_sharded_contract_2dev():
     assert all(r["pass"] for r in res), res
 
 
+def test_balance_2dev():
+    """Fast (non-slow) distributed-balancer coverage: P=1 bit-identity
+    with the host balancer, adversarial-start feasibility, sharded
+    cluster-weight enforcement equivalence, and the no-host-gather trace
+    assertion for balance="dist" under both weight-table layouts."""
+    res = run_selftest("--devices", "2", "--n", "900", "--k", "4",
+                       "--test", "balance")
+    assert len(res) == 8, res
+    assert all(r["pass"] for r in res), res
+
+
 @pytest.mark.slow
 def test_halo_8dev():
     """Ghost-vertex exchange must reproduce the single-process graph's
@@ -96,6 +107,16 @@ def test_dist_contract_8dev():
     isomorphism, and grid-vs-direct equality of the edge exchange."""
     res = run_selftest("--devices", "8", "--test", "contract",
                        "--n", "3000")
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_dist_balance_8dev():
+    """Distributed balancer at scale: feasibility, quality bound and the
+    no-host-gather assertion on 8 devices (2x4 grid routing)."""
+    res = run_selftest("--devices", "8", "--test", "balance",
+                       "--n", "3000")
+    assert len(res) == 8, res
     assert all(r["pass"] for r in res), res
 
 
