@@ -11,7 +11,6 @@ import numpy as np
 
 from repro.core import metrics
 from repro.core.balance import rebalance
-from repro.graphs import generators
 
 from .common import emit, instance_set
 

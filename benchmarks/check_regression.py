@@ -1,0 +1,191 @@
+"""CI bench regression gate — compare fresh artifacts to baselines.
+
+CI regenerates ``BENCH_api.json`` / ``BENCH_dist.json`` /
+``BENCH_balance.json`` / ``BENCH_serve.json`` in the working tree; this
+gate compares them against the *committed* baselines (``git show
+HEAD:<file>`` by default, or ``--baseline-dir``) and fails the job —
+instead of only uploading artifacts — when:
+
+  * any fresh record is infeasible (``"feasible": false`` anywhere) or
+    reports failed serve requests;
+  * a ``cut`` regresses by more than ``--tolerance`` (cuts are
+    deterministic for fixed seeds, so any growth is a code change);
+  * a latency/time metric regresses by more than ``--time-tolerance``
+    *beyond* ``--time-floor`` seconds of absolute slack. Wall clock is
+    machine-dependent (the committed baselines and the CI runner are
+    different hardware) so its default budget is deliberately loose —
+    100%, enough to catch an accidental complexity blowup or a lost
+    jit cache without flaking on runner variance; tighten it with
+    ``--time-tolerance 0.25`` when comparing runs from one machine;
+  * serve throughput drops beyond the equivalent slack.
+
+Structure changes (a key or list entry present on only one side) are
+reported but don't fail the gate — renaming a benchmark field is a
+reviewed code change, not a perf regression.
+
+  python -m benchmarks.check_regression
+  python -m benchmarks.check_regression --files BENCH_api.json \
+      --tolerance 0.25 --baseline-ref origin/main
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEFAULT_FILES = ["BENCH_api.json", "BENCH_dist.json",
+                 "BENCH_balance.json", "BENCH_serve.json"]
+
+# keys gated as "lower is better" wall-clock seconds
+TIME_KEYS = {"time_s", "wall_s", "s_per_round", "latency_p50_s",
+             "latency_p99_s", "queue_wait_p50_s", "coarsen_s_total"}
+# keys gated as "higher is better" rates
+RATE_KEYS = {"throughput_rps"}
+
+
+def load_baseline(name: str, ref: str,
+                  baseline_dir: Optional[str]) -> Optional[dict]:
+    if baseline_dir is not None:
+        path = os.path.join(baseline_dir, name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+    proc = subprocess.run(["git", "-C", ROOT, "show", f"{ref}:{name}"],
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def walk(fresh, base, path: str, failures: List[str],
+         notes: List[str], tol: float, time_tol: float,
+         floor: float) -> None:
+    """Recursively gate matching paths of the two artifacts."""
+    if isinstance(fresh, dict):
+        if not isinstance(base, dict):
+            notes.append(f"{path}: structure changed (dict vs baseline "
+                         f"{type(base).__name__})")
+            return
+        for key, fval in fresh.items():
+            sub = f"{path}.{key}" if path else key
+            if key not in base:
+                notes.append(f"{sub}: new in fresh artifact")
+                continue
+            walk(fval, base[key], sub, failures, notes, tol, time_tol,
+                 floor)
+        return
+    if isinstance(fresh, list):
+        if not isinstance(base, list) or len(base) != len(fresh):
+            notes.append(f"{path}: list shape changed "
+                         f"({len(fresh)} entries)")
+            return
+        for i, (fv, bv) in enumerate(zip(fresh, base)):
+            walk(fv, bv, f"{path}[{i}]", failures, notes, tol,
+                 time_tol, floor)
+        return
+    key = path.rsplit(".", 1)[-1].split("[")[0]
+    if key == "cut" and isinstance(fresh, (int, float)) \
+            and isinstance(base, (int, float)):
+        if fresh > base * (1 + tol):
+            failures.append(f"{path}: cut regressed {base} -> {fresh} "
+                            f"(>{tol:.0%})")
+    elif key in TIME_KEYS and isinstance(fresh, (int, float)) \
+            and isinstance(base, (int, float)):
+        if fresh > base * (1 + time_tol) + floor:
+            failures.append(f"{path}: time regressed {base:.4f}s -> "
+                            f"{fresh:.4f}s (>{time_tol:.0%} + {floor}s)")
+    elif key in RATE_KEYS and isinstance(fresh, (int, float)) \
+            and isinstance(base, (int, float)):
+        if fresh * (1 + time_tol) < base and base - fresh > floor:
+            failures.append(f"{path}: throughput regressed {base} -> "
+                            f"{fresh} (>{time_tol:.0%})")
+
+
+def check_invariants(node, path: str, failures: List[str]) -> None:
+    """Feasibility (and serve failure counters) must hold regardless of
+    any baseline: an infeasible partition is a correctness bug."""
+    if isinstance(node, dict):
+        for key, val in node.items():
+            sub = f"{path}.{key}" if path else key
+            if key == "feasible" and val is False:
+                failures.append(f"{sub}: infeasible partition")
+            elif key == "failed" and isinstance(val, int) and val > 0:
+                failures.append(f"{sub}: {val} failed request(s)")
+            else:
+                check_invariants(val, sub, failures)
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            check_invariants(val, f"{path}[{i}]", failures)
+
+
+def check_file(name: str, ref: str, baseline_dir: Optional[str],
+               tol: float, time_tol: float,
+               floor: float) -> Tuple[List[str], List[str]]:
+    failures: List[str] = []
+    notes: List[str] = []
+    if not os.path.exists(name):
+        return [f"{name}: fresh artifact missing (bench not run?)"], notes
+    with open(name) as f:
+        fresh = json.load(f)
+    check_invariants(fresh, name, failures)
+    base = load_baseline(name, ref, baseline_dir)
+    if base is None:
+        notes.append(f"{name}: no committed baseline (new artifact) — "
+                     "feasibility checked only")
+        return failures, notes
+    walk(fresh, base, name, failures, notes, tol, time_tol, floor)
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--files", default=",".join(DEFAULT_FILES),
+                    help="comma-separated artifact names (working dir)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref the committed baselines are read from")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="read baselines from a directory instead of git")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative budget for deterministic metrics "
+                         "(cuts; default 25%%)")
+    ap.add_argument("--time-tolerance", type=float, default=1.0,
+                    help="relative budget for wall-clock metrics "
+                         "(default 100%% — runner speeds differ; "
+                         "tighten for same-machine comparisons)")
+    ap.add_argument("--time-floor", type=float, default=0.5,
+                    help="absolute seconds of slack on time metrics "
+                         "before the relative gate applies")
+    args = ap.parse_args()
+
+    all_failures: List[str] = []
+    for name in args.files.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        failures, notes = check_file(name, args.baseline_ref,
+                                     args.baseline_dir, args.tolerance,
+                                     args.time_tolerance,
+                                     args.time_floor)
+        for n in notes:
+            print(f"[gate:note] {n}")
+        for f in failures:
+            print(f"[gate:FAIL] {f}")
+        if not failures:
+            print(f"[gate:ok] {name}")
+        all_failures.extend(failures)
+
+    if all_failures:
+        print(f"[gate] {len(all_failures)} regression(s) — failing")
+        return 1
+    print("[gate] all artifacts within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

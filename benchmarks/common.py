@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Iterable, List, Tuple
+from typing import Callable, Iterable, List, Tuple
 
 import numpy as np
 

@@ -12,6 +12,9 @@ Sections:
   balance        — host vs distributed balancer: rounds to feasibility,
                    per-round time, bytes exchanged (gather vs pooled
                    candidates), emits BENCH_balance.json
+  serve          — multi-mesh serving tier: throughput, p50/p99 latency,
+                   queue depth vs offered load at 1 vs 2 meshes, emits
+                   BENCH_serve.json
   quality        — Fig 2a/b: deep vs plain vs single-level LP edge cuts
   large_k        — Table 2: feasibility at large k
   balancer       — §4 Balancing: repair of adversarial imbalance
@@ -24,14 +27,13 @@ Sections:
 """
 import argparse
 import os
-import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smallest instances (CI mode)")
-    ap.add_argument("--sections", default="api,dist,balance,quality,"
+    ap.add_argument("--sections", default="api,dist,balance,serve,quality,"
                     "large_k,balancer,kernels,scaling")
     args = ap.parse_args()
     sections = args.sections.split(",")
@@ -46,6 +48,9 @@ def main() -> None:
     if "balance" in sections:
         from . import balance_bench
         balance_bench.run(fast=args.fast)
+    if "serve" in sections:
+        from . import serve_bench
+        serve_bench.run(fast=args.fast)
     if "quality" in sections:
         from . import quality
         quality.run(scale="small", ks=(2, 8, 32),

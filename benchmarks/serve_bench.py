@@ -1,0 +1,112 @@
+"""Serving-tier benchmark: throughput/latency/queue depth, 1 vs 2 meshes.
+
+Drives the same mixed request set through ``repro.serve.PartitionServer``
+at two offered loads (burst admission and paced admission just above a
+single mesh's service rate) for 1 and 2 worker meshes, in a
+forced-2-device subprocess, and writes ``BENCH_serve.json``: wall time,
+throughput, p50/p99 end-to-end latency, queue-wait and queue-depth
+stats, and per-worker served counts — the scaling claim of the serving
+tier (adding a mesh drains the same offered load with a shorter queue)
+tracked run-over-run by ``benchmarks.check_regression``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict
+
+from .common import emit
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import json, sys, time
+R = int(sys.argv[1]); n = int(sys.argv[2]); k = int(sys.argv[3])
+from repro.api import runtime
+runtime.force_host_devices(2)
+from repro.api import GraphSpec, PartitionRequest, Partitioner
+from repro.core import PartitionerConfig
+from repro.serve import PartitionServer
+
+cfg = PartitionerConfig(contraction_limit=128, ip_repetitions=1,
+                        num_chunks=4)
+reqs = [PartitionRequest(
+            graph=GraphSpec("rgg2d", n // 2 * (1 + i % 3), 8.0,
+                            seed=41 + i % 4),
+            k=k * (1 + i % 2), config=cfg, collect_trace=False)
+        for i in range(R)]
+
+# warm every request shape once (jit caches are process-global, so the
+# first measured configuration would otherwise pay all compilations and
+# skew the 1-vs-2-mesh comparison), then estimate the warm solo service
+# time so the paced load lands just above one mesh's capacity
+engine = Partitioner()
+for r in reqs:
+    engine.run(r)
+t0 = time.perf_counter()
+engine.run(reqs[0])
+t_solo = max(time.perf_counter() - t0, 1e-3)
+paced_rps = 1.5 / t_solo
+
+out = {"requests": R, "n": n, "k": k,
+       "solo_service_s": round(t_solo, 4), "meshes": {}}
+for meshes in (1, 2):
+    per = {}
+    for load, rate in (("burst", 0.0), ("paced", paced_rps)):
+        with PartitionServer(meshes=meshes) as srv:
+            t0 = time.perf_counter()
+            futs = []
+            for r in reqs:
+                futs.append(srv.submit(r))
+                if rate > 0:
+                    time.sleep(1.0 / rate)
+            results = [f.result() for f in futs]
+            wall = time.perf_counter() - t0
+            st = srv.stats()
+        ok = all(r.ok for r in results)
+        feas = ok and all(r.result.feasible for r in results)
+        per[load] = {
+            "offered_rps": round(rate, 3) if rate else "burst",
+            "wall_s": round(wall, 4),
+            "throughput_rps": round(len(results) / wall, 4),
+            "latency_p50_s": st["latency_p50_s"],
+            "latency_p99_s": st["latency_p99_s"],
+            "queue_wait_p50_s": st["queue_wait_p50_s"],
+            "queue_depth_max": st["queue_depth_max"],
+            "queue_depth_mean": st["queue_depth_mean"],
+            "per_worker_served": st["per_worker_served"],
+            "completed": st["completed"], "failed": st["failed"],
+            "feasible": feas,
+        }
+    out["meshes"][str(meshes)] = per
+print(json.dumps(out))
+"""
+
+
+def run(fast: bool = True, out_json: str = "BENCH_serve.json") -> Dict:
+    R, n, k = (8, 1500, 4) if fast else (16, 4000, 8)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(R), str(n), str(k)],
+        capture_output=True, text=True, env=env, timeout=3000)
+    if proc.returncode != 0:
+        emit("serve/error", 0.0, proc.stderr[-300:].replace(",", ";"))
+        raise RuntimeError(f"serve bench child failed:\n{proc.stderr[-2000:]}")
+    result = json.loads(proc.stdout.splitlines()[-1])
+    for meshes, loads in result["meshes"].items():
+        for load, rec in loads.items():
+            emit(f"serve/{meshes}mesh/{load}", rec["wall_s"],
+                 f"rps={rec['throughput_rps']};p99={rec['latency_p99_s']};"
+                 f"depth={rec['queue_depth_max']};feas={rec['feasible']}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(result, f, indent=1)
+        emit("serve/artifact", 0.0, out_json)
+    return result
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -48,7 +48,7 @@ def register_backend(name: str, fn: Optional[BackendFn] = None):
     """Register ``fn`` under ``name``; usable as a decorator."""
     def _do(f: BackendFn) -> BackendFn:
         if not name or not isinstance(name, str):
-            raise ValueError(f"backend name must be a non-empty str, "
+            raise ValueError("backend name must be a non-empty str, "
                              f"got {name!r}")
         _REGISTRY[name] = f
         return f
@@ -86,6 +86,16 @@ def resolve_backend(req, n_graph_vertices: int) -> str:
     if P > 1 and n_graph_vertices >= MIN_VERTICES_PER_DEVICE * P:
         return "dist-grid" if P >= GRID_ROUTING_MIN_DEVICES else "dist"
     return "single"
+
+
+def required_devices(req, n_graph_vertices: int) -> int:
+    """PE count the request's *resolved* backend actually needs: its
+    ``devices`` field for the distributed backends, 1 for everything
+    else. Pure (same inputs as ``resolve_backend``) — the serving
+    scheduler routes requests to the best-fitting mesh with this,
+    without materializing graphs or touching jax."""
+    name = resolve_backend(req, n_graph_vertices)
+    return max(1, req.devices) if name in ("dist", "dist-grid") else 1
 
 
 # ---------------------------------------------------------------------------

@@ -69,7 +69,7 @@ def partition(graph: Union[Graph, GraphSpec], k: int,
     """One-shot convenience: build a request, run the default facade.
 
     ``repro.api.partition(g, k=16, epsilon=0.03).assignment`` replaces
-    the deprecated ``repro.core.partitioner.partition(g, 16)``.
+    the removed ``repro.core.partitioner.partition(g, 16)``.
     """
     return Partitioner().run(PartitionRequest(graph=graph, k=k,
                                               **request_kw))

@@ -92,11 +92,11 @@ class PartitionRequest:
                 f"one of {available_backends()}")
         if self.contraction not in (None, "host", "sharded"):
             raise ValueError(
-                f"contraction must be 'host' or 'sharded', "
+                "contraction must be 'host' or 'sharded', "
                 f"got {self.contraction!r}")
         if self.weights not in (None, "replicated", "owner"):
             raise ValueError(
-                f"weights must be 'replicated' or 'owner', "
+                "weights must be 'replicated' or 'owner', "
                 f"got {self.weights!r}")
         if self.balance not in (None, "host", "dist"):
             raise ValueError(

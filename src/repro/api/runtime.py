@@ -32,6 +32,32 @@ def device_count() -> int:
     return len(jax.devices())
 
 
+def device_slices(num_slices: int, devices_per_slice: int):
+    """Carve the host's devices into ``num_slices`` disjoint contiguous
+    slices of ``devices_per_slice`` devices each (the serving tier's
+    worker meshes — saxml-style: one model server per device group).
+
+    Initializes jax. Raises ``RuntimeError`` when the host doesn't have
+    ``num_slices * devices_per_slice`` devices — oversubscribing a
+    device into two meshes would serialize their collectives against
+    each other, which is exactly what a multi-mesh tier exists to avoid.
+    """
+    if num_slices < 1 or devices_per_slice < 1:
+        raise ValueError(
+            "need num_slices >= 1 and devices_per_slice >= 1, got "
+            f"{num_slices} x {devices_per_slice}")
+    import jax
+    devs = jax.devices()
+    need = num_slices * devices_per_slice
+    if len(devs) < need:
+        raise RuntimeError(
+            f"cannot carve {num_slices} slices of {devices_per_slice} "
+            f"device(s) from {len(devs)} visible device(s); force more "
+            "with force_host_devices() before any jax computation")
+    return [devs[i * devices_per_slice:(i + 1) * devices_per_slice]
+            for i in range(num_slices)]
+
+
 def force_host_devices(n: int) -> None:
     """Force ``n`` host (CPU) devices via XLA_FLAGS.
 

@@ -36,20 +36,47 @@ class PartitionSession:
         Thread-pool width for concurrent independent requests. Graph
         generation and the numpy driver phases overlap; jitted programs
         serialize on the device, so a small pool is plenty.
+    mesh:
+        Optional pre-built 1D ``'pe'`` mesh of exactly ``devices``
+        devices. The multi-mesh serving tier (``repro.serve``) carves
+        the host's devices into disjoint slices and binds one session
+        per slice; without it the session lazily builds a mesh over the
+        first ``devices`` host devices.
+    graph_cache:
+        Optional externally owned ``GraphSpec -> Graph`` mapping. The
+        serving tier shares one cache across all worker sessions so a
+        spec is materialized once per *server*, not once per mesh.
+    graph_cache_lock:
+        Lock guarding ``graph_cache``. Callers sharing one cache across
+        sessions must share one lock too — otherwise two sessions can
+        miss concurrently and both pay the materialization. The lock is
+        held *through* the materialize on purpose: duplicated generator
+        work costs seconds, a serialized cache miss costs a wait.
     """
 
     def __init__(self, devices: int = 1, backend: Optional[str] = None,
-                 max_workers: int = 4):
+                 max_workers: int = 4, mesh=None,
+                 graph_cache: Optional[Dict[GraphSpec, object]] = None,
+                 graph_cache_lock: Optional[threading.Lock] = None):
         if devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
+        if mesh is not None and (mesh.axis_names != ("pe",)
+                                 or mesh.devices.size != devices):
+            raise ValueError(
+                f"mesh must be a 1D 'pe' mesh of exactly {devices} "
+                f"device(s), got axes {mesh.axis_names} over "
+                f"{mesh.devices.size}")
         self.devices = devices
         self._engine = Partitioner(backend=backend)
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="repro-api")
         self._lock = threading.Lock()
-        self._mesh = None
+        self._mesh = mesh
         self._shard_ctx = None
-        self._graph_cache: Dict[GraphSpec, object] = {}
+        self._graph_cache: Dict[GraphSpec, object] = \
+            graph_cache if graph_cache is not None else {}
+        self._graph_cache_lock = graph_cache_lock if \
+            graph_cache_lock is not None else threading.Lock()
         self._served = 0
         self._total_time_s = 0.0
         self._closed = False
@@ -79,13 +106,15 @@ class PartitionSession:
         return self._shard_ctx
 
     def _resolve_graph(self, req: PartitionRequest):
-        """Materialize (and cache) GraphSpec graphs once per session."""
+        """Materialize (and cache) GraphSpec graphs once per cache —
+        the lock spans the materialize so concurrent misses on one spec
+        (possibly from different sessions sharing the cache) never
+        duplicate the generator work."""
         if isinstance(req.graph, GraphSpec):
-            with self._lock:
+            with self._graph_cache_lock:
                 g = self._graph_cache.get(req.graph)
-            if g is None:
-                g = req.graph.materialize()
-                with self._lock:
+                if g is None:
+                    g = req.graph.materialize()
                     self._graph_cache[req.graph] = g
             return dataclasses.replace(req, graph=g)
         return req
@@ -129,9 +158,11 @@ class PartitionSession:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def close(self) -> None:
+    def close(self, wait: bool = True) -> None:
+        """``wait=False`` abandons in-flight work — the serving tier
+        uses it for workers whose executor thread is known wedged."""
         self._closed = True
-        self._pool.shutdown(wait=True)
+        self._pool.shutdown(wait=wait)
 
     def __enter__(self) -> "PartitionSession":
         return self

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 _REGISTRY: Dict[str, "ArchEntry"] = {}
 

@@ -1,5 +1,5 @@
 """dKaMinPar core: distributed deep multilevel graph partitioning in JAX."""
 from .deep_mgp import PartitionerConfig
-from .partitioner import fast_config, partition, strong_config
+from .partitioner import fast_config, strong_config
 
-__all__ = ["partition", "PartitionerConfig", "fast_config", "strong_config"]
+__all__ = ["PartitionerConfig", "fast_config", "strong_config"]

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

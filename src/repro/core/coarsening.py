@@ -9,8 +9,6 @@ them via the ``+ max_v c(v)`` term).
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax.numpy as jnp
 import numpy as np
 

@@ -70,11 +70,11 @@ class PartitionerConfig:
                 f"{self.refine_iterations}")
         if self.contraction not in ("host", "sharded"):
             raise ValueError(
-                f"contraction must be 'host' or 'sharded', "
+                "contraction must be 'host' or 'sharded', "
                 f"got {self.contraction!r}")
         if self.weights not in ("replicated", "owner"):
             raise ValueError(
-                f"weights must be 'replicated' or 'owner', "
+                "weights must be 'replicated' or 'owner', "
                 f"got {self.weights!r}")
         if self.balance not in ("host", "dist"):
             raise ValueError(

@@ -1,8 +1,6 @@
 """Partition quality metrics (paper Section 2 definitions)."""
 from __future__ import annotations
 
-from typing import Tuple
-
 import numpy as np
 
 from ..graphs.format import Graph

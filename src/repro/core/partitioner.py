@@ -1,21 +1,19 @@
-"""Legacy single-process entrypoint — superseded by ``repro.api``.
+"""Preset configurations for the paper's two partitioner variants.
 
-``partition`` is kept as a thin deprecation shim; new code should build a
-``repro.api.PartitionRequest`` and run it through ``repro.api.Partitioner``
-(or the ``repro.api.partition`` convenience wrapper). The preset builders
-``fast_config`` / ``strong_config`` remain the canonical way to spell the
-paper's two configurations and are *not* deprecated.
+The preset builders ``fast_config`` / ``strong_config`` are the
+canonical way to spell the paper's configurations; ``resolve_config``
+turns (preset, explicit config, epsilon, seed) into a validated
+``PartitionerConfig``. The legacy ``partition`` entrypoint that lived
+here was deprecated in the ``repro.api`` release and has been removed —
+use ``repro.api.partition(g, k, ...)`` (see docs/API.md's migration
+table) or call ``repro.core.deep_mgp.partition`` directly.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
-import numpy as np
-
-from ..graphs.format import Graph
 from . import metrics
-from .deep_mgp import PartitionerConfig, partition as _partition
+from .deep_mgp import PartitionerConfig
 
 
 def fast_config(seed: int = 0, **overrides) -> PartitionerConfig:
@@ -53,24 +51,5 @@ def resolve_config(preset: str = "fast",
     return builder(seed=seed, epsilon=epsilon).validate()
 
 
-def partition(g: Graph, k: int,
-              epsilon: float = 0.03,
-              config: Optional[PartitionerConfig] = None,
-              seed: int = 0) -> np.ndarray:
-    """Deep multilevel k-way partition of ``g`` into ``k`` blocks.
-
-    .. deprecated:: 0.2
-       Use ``repro.api.partition(g, k, ...)`` (returns a
-       ``PartitionResult`` whose ``.assignment`` is this array).
-    """
-    warnings.warn(
-        "repro.core.partitioner.partition is deprecated; use "
-        "repro.api.partition / repro.api.Partitioner instead",
-        DeprecationWarning, stacklevel=2)
-    if k <= 1:
-        return np.zeros(g.n, dtype=np.int64)
-    return _partition(g, k, resolve_config("fast", config, epsilon, seed))
-
-
-__all__ = ["partition", "fast_config", "strong_config", "resolve_config",
+__all__ = ["fast_config", "strong_config", "resolve_config",
            "PRESETS", "PartitionerConfig", "metrics"]

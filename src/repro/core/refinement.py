@@ -33,7 +33,7 @@ def pad_blocks(block_w: np.ndarray, l_max_vec: np.ndarray,
     if np.any(block_w.astype(np.int64) > int(_BIG_L)) or \
             np.any(block_w.astype(np.int64) < 0):
         raise ValueError(
-            f"pad_blocks: block weights must fit int32 (max "
+            "pad_blocks: block weights must fit int32 (max "
             f"{int(block_w.max())}); totals >= 2^31 are not supported by "
             "the int32 jit path")
     k_pad = max(min_bucket, 1 << max(0, (k - 1)).bit_length())

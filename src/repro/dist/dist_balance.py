@@ -79,7 +79,6 @@ def _build_balance_round_fn(mesh, P, k, n, n_loc, n_ghost, top_m, use_grid,
                             owner):
     kk = k + 1                    # sentinel block k
     S_k = owner_table_width(kk, P)
-    L = P * S_k if owner else kk
 
     def per_pe(lab_loc, lab_ghost, bw_state, src, dst, w, vw_loc, lgid,
                send_idx, recv_slot, offsets, l_max, salt):

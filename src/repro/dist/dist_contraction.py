@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

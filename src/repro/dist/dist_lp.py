@@ -38,7 +38,6 @@ routing, so grid and direct runs produce identical labels.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

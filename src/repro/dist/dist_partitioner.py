@@ -16,14 +16,13 @@ cluster→PE assignment + all-to-all edge exchange of
 vs "owner"-sharded authoritative tables in ``dist_lp``). The defaults
 ("host"/"replicated") reproduce the original pipeline bit-for-bit.
 
-The public ``dist_partition`` entrypoint is a deprecation shim; new code
-routes through ``repro.api`` (backend names ``"dist"`` / ``"dist-grid"``),
-which calls ``dist_partition_impl`` and can reuse one mesh across requests.
+The public surface is ``repro.api`` (backend names ``"dist"`` /
+``"dist-grid"``), which calls ``dist_partition_impl`` and can reuse one
+mesh across requests; the old ``dist_partition`` shim is gone.
 """
 from __future__ import annotations
 
 import time
-import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -192,21 +191,6 @@ def dist_partition_impl(g: Graph,
     return part
 
 
-def dist_partition(g: Graph,
-                   k: int,
-                   P: int,
-                   cfg: Optional[PartitionerConfig] = None,
-                   use_grid: bool = True) -> np.ndarray:
-    """Distributed deep multilevel k-way partition over P PEs.
-
-    .. deprecated:: 0.2
-       Use ``repro.api.Partitioner`` with backend ``"dist"`` (direct
-       all-to-all) or ``"dist-grid"`` (two-level grid routing).
-    """
-    warnings.warn(
-        "repro.dist.dist_partitioner.dist_partition is deprecated; use "
-        "repro.api.Partitioner with backend 'dist' or 'dist-grid'",
-        DeprecationWarning, stacklevel=2)
-    if k <= 1 or g.n == 0:
-        return np.zeros(g.n, dtype=np.int64)
-    return dist_partition_impl(g, k, P, cfg=cfg, use_grid=use_grid)
+# The deprecated ``dist_partition`` shim was removed after its release
+# of grace: route through ``repro.api`` (backends "dist" / "dist-grid"),
+# which calls ``dist_partition_impl`` — see docs/API.md.

@@ -13,8 +13,6 @@ and complex networks. We reproduce the same families at laptop scale:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import numpy as np
 from scipy.spatial import cKDTree
 

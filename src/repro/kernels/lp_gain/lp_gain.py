@@ -72,8 +72,6 @@ def lp_gain_ell(lab, w, tgt_w, own_lab, vw, budget, *, row_tile: int = 256,
     n, d = lab.shape
     assert n % row_tile == 0, (n, row_tile)
     grid = (n // row_tile,)
-    row_spec = lambda width, : pl.BlockSpec((row_tile, width),
-                                            lambda i: (i, 0))
     out_shapes = (
         jax.ShapeDtypeStruct((n, 1), jnp.float32),
         jax.ShapeDtypeStruct((n, 1), jnp.int32),

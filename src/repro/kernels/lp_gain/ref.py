@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the lp_gain kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -13,8 +13,11 @@ under both memory models, the distributed balancer (``--test balance``:
 P=1 bit-identity with the host balancer, adversarial-start feasibility,
 sharded cluster-weight enforcement, and the no-host-gather trace
 assertion for ``balance="dist"``), grid vs direct all-to-all
-equivalence, and the ``repro.api`` facade (old-vs-new equality, batched
-sessions).
+equivalence, the ``repro.api`` facade (driver equality, batched
+sessions), and the ``repro.serve`` multi-mesh tier (``--test serve``:
+a 2-mesh server drains concurrent mixed-size requests bit-identically
+to solo runs, a killed worker's request completes via retry on the
+other mesh, and deadline expiry surfaces a structured error).
 Prints one JSON line per test; exit code 0 iff all pass.
 """
 import argparse
@@ -28,7 +31,7 @@ def main() -> int:
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
                              "contract", "partition", "refine", "balance",
-                             "smoke", "api"])
+                             "smoke", "api", "serve"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -370,6 +373,77 @@ def main() -> int:
         report("api.session_batch", same and served == len(reqs),
                served=served,
                cuts=[b.cut for b in batch])
+
+    if args.test in ("all", "serve"):
+        import time
+        from repro.api import (GraphSpec, PartitionRequest, Partitioner)
+        from repro.serve import PartitionServer
+
+        dpm = max(1, P // 2)
+        engine = Partitioner()
+        # >= 8 concurrent mixed-size requests: three sizes, two k
+        # values, and (on multi-device hosts) distributed requests that
+        # exercise the second mesh's device slice
+        mixed = []
+        for i in range(8):
+            nn = max(600, args.n // 4) * (1 + i % 3)
+            kk = max(2, args.k // 2) * (1 + i % 2)
+            dev = dpm if (i % 4 == 3 and dpm > 1) else 1
+            mixed.append(PartitionRequest(
+                graph=GraphSpec(args.family, nn, 8.0, seed=23 + i % 3),
+                k=kk, config=cfg, devices=dev))
+        solo = [engine.run(r) for r in mixed]
+
+        # 2-mesh server over disjoint device slices drains the batch
+        # bit-identically to solo runs, using both meshes
+        with PartitionServer(meshes=2, devices_per_mesh=dpm) as srv:
+            results = srv.serve(mixed)
+            st = srv.stats()
+        same = all(r.ok and np.array_equal(r.result.assignment,
+                                           s.assignment)
+                   for r, s in zip(results, solo))
+        report("serve.bit_identical_mixed",
+               same and st["completed"] == len(mixed),
+               served=st["per_worker_served"],
+               queue_depth_max=st["queue_depth_max"])
+        report("serve.both_meshes_used",
+               all(c > 0 for c in st["per_worker_served"]),
+               served=st["per_worker_served"])
+
+        # a killed worker's requests complete via retry on the other
+        # mesh — hold worker 1 at its gate so it provably owns work
+        with PartitionServer(meshes=2, devices_per_mesh=dpm) as srv:
+            srv.workers[1].hold()
+            futs = [srv.submit(r) for r in mixed[:4]]
+            t_end = time.monotonic() + 30
+            while time.monotonic() < t_end and \
+                    srv.workers[1].inflight == 0:
+                time.sleep(0.01)
+            had_work = srv.workers[1].inflight > 0
+            srv.kill_worker(1)
+            rs = [f.result(timeout=600) for f in futs]
+            st = srv.stats()
+        same_k = all(r.ok and np.array_equal(r.result.assignment,
+                                             s.assignment)
+                     for r, s in zip(rs, solo[:4]))
+        report("serve.killed_worker_retry",
+               had_work and same_k and st["retried"] >= 1 and
+               st["per_worker_served"][1] == 0,
+               retried=st["retried"], served=st["per_worker_served"])
+
+        # deadline expiry surfaces a structured error, not a hang
+        with PartitionServer(meshes=2, devices_per_mesh=1) as srv:
+            for w in srv.workers:
+                w.hold()
+            fut = srv.submit(mixed[0], deadline_s=0.05)
+            time.sleep(0.2)
+            for w in srv.workers:
+                w.release()
+            r = fut.result(timeout=60)
+            st = srv.stats()
+        report("serve.deadline_error",
+               (not r.ok) and r.error == "deadline_exceeded" and
+               st["expired"] == 1, error=r.error)
 
     return 0 if ok else 1
 

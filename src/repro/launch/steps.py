@@ -4,12 +4,10 @@ abstract inputs + input shardings. Shared by dryrun, train and serve CLIs.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from ..configs import ArchEntry, ShapeSpec
@@ -100,8 +98,6 @@ def _lm_model_flops(cfg: T.TransformerConfig, tokens: int,
                     decode: bool = False, ctx_len: int = 0) -> float:
     """6·N_active·D (+ attention KV term for decode)."""
     d, L = cfg.d_model, cfg.n_layers
-    per_layer = 2 * d * (cfg.q_dim + 2 * cfg.kv_dim) + \
-        2 * d * cfg.q_dim  # qkv + out proj (x2 for mac=2flops handled below)
     ffn_mult = 3 if cfg.glu else 2
     dense = ffn_mult * d * cfg.d_ff if (cfg.moe_dense_residual or
                                         not cfg.moe) else 0
@@ -200,7 +196,6 @@ def build_lm_decode(entry: ArchEntry, shape: ShapeSpec, mesh,
 def _gnn_batch_abs(entry, cfg, shape: ShapeSpec, mesh):
     p = shape.params
     n_pad, e_pad = p["n_pad"], p["e_pad"]
-    molecule = shape.kind == "gnn_molecule"
     n_graphs = p.get("batch", 1)
     batch = {
         "senders": _sds((e_pad,), jnp.int32),

@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import load_all
 from repro.models import dlrm as DL
@@ -44,7 +43,6 @@ def make_dlrm_pipeline(cfg, batch: int, seed: int):
 
 
 def make_gnn_pipeline(entry, cfg, seed: int):
-    from repro.graphs import generators
     from repro.launch.gnn_data import build_gnn_batch
     batch = build_gnn_batch(entry.arch_id, cfg, n=400, seed=seed)
     mod = __import__(f"repro.models.gnn.{_mod_name(entry.arch_id)}",

@@ -12,11 +12,10 @@ JAX has no native EmbeddingBag — it is built here from ``jnp.take`` +
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..dist.sharding import NULL_CTX, ShardCtx
 from .common import ParamSpec
@@ -92,7 +91,6 @@ def forward(params, batch, cfg: DLRMConfig, ctx: ShardCtx = NULL_CTX):
     """batch: dense (B, 13) float, sparse (B, 26, bag) int32.
     Returns logits (B,)."""
     dense, sparse = batch["dense"], batch["sparse"]
-    B = dense.shape[0]
     cd = cfg.compute_dtype
     bot = _mlp(params, "bot", len(cfg.bot_mlp), dense.astype(cd),
                final_act=jax.nn.relu)                       # (B, 64)

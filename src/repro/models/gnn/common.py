@@ -8,7 +8,7 @@ sentinel so gathers stay in-bounds and scatters land in a junk slot.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

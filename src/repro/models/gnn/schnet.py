@@ -7,7 +7,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
 
 from ...dist.sharding import NULL_CTX, ShardCtx

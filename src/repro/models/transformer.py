@@ -12,7 +12,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..dist.sharding import NULL_CTX, ShardCtx
 from .common import (ParamSpec, act_fn, cross_entropy_loss, rms_norm, rope)

@@ -4,7 +4,7 @@ sampled batches. The k-way balanced min-cut groups co-accessed tables on
 the same shard, cutting cross-device fused-lookup traffic."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

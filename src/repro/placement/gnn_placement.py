@@ -5,7 +5,7 @@ graphs/distribute.py applies unchanged."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -1,0 +1,48 @@
+"""Multi-mesh serving tier — traffic, not single jobs.
+
+``PartitionServer`` layers an admission queue (priorities, deadlines),
+a best-fit mesh scheduler, a shared graph cache and worker supervision
+(one retry on another mesh, then a structured error) over N disjoint
+device-mesh ``PartitionSession`` workers:
+
+    from repro.serve import PartitionServer
+
+    with PartitionServer(meshes=2, devices_per_mesh=4) as srv:
+        fut = srv.submit(request, priority=0, deadline_s=30.0)
+        res = fut.result()  # ServeResult
+        res.ok, res.result, res.error, res.worker
+
+Results are bit-identical to solo ``repro.api.Partitioner.run`` for
+the same request. See docs/SERVING.md.
+
+Exports resolve lazily (PEP 562) so importing ``repro.serve`` never
+initializes jax — device carving happens at server construction.
+"""
+
+from importlib import import_module
+
+_EXPORTS = {
+    "PartitionServer": ".server",
+    "ServeResult": ".server",
+    "AdmissionQueue": ".queue",
+    "Ticket": ".queue",
+    "ServeMetrics": ".metrics",
+    "pick_worker": ".scheduler",
+    "rank": ".scheduler",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        mod = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        ) from None
+    return getattr(import_module(mod, __name__), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,121 @@
+"""Serving-tier metrics: counters, latency percentiles, queue depth.
+
+One :class:`ServeMetrics` per server, updated from the dispatcher and
+every worker thread, snapshotted into plain dicts. Latencies keep a
+bounded sample (admission -> resolution, i.e. queue wait plus every
+attempt) so p50/p99 stay O(1) memory under sustained load; queue depth
+is sampled at every admission and dispatch, giving the
+depth-vs-offered-load curve the serve benchmark tracks.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+_MAX_SAMPLES = 8192
+
+
+def percentile(sorted_xs: List[float], p: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample (0 when
+    empty) — enough fidelity for serving dashboards, no numpy needed
+    on the hot path."""
+    if not sorted_xs:
+        return 0.0
+    n = len(sorted_xs)
+    idx = int(round(p / 100.0 * (n - 1)))
+    return sorted_xs[min(n - 1, max(0, idx))]
+
+
+class ServeMetrics:
+    """Thread-safe counters + bounded reservoirs for one server."""
+
+    def __init__(self, num_workers: int):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0  # resolved ok
+        self.failed = 0  # resolved with a structured error
+        self.expired = 0  # failed specifically on the deadline
+        self.rejected = 0  # refused at admission (queue full/closed)
+        self.retried = 0  # attempts re-routed to another mesh
+        self.per_worker_served = [0] * num_workers
+        self._latencies: List[float] = []
+        self._queue_waits: List[float] = []
+        self._depth_samples: List[int] = []
+
+    # -- recording (called by server/dispatcher/workers) ---------------
+
+    def on_submit(self, depth: int) -> None:
+        with self._lock:
+            self.submitted += 1
+            self._sample(self._depth_samples, depth)
+
+    def on_dispatch(self, depth: int) -> None:
+        with self._lock:
+            self._sample(self._depth_samples, depth)
+
+    def on_retry(self) -> None:
+        with self._lock:
+            self.retried += 1
+
+    def on_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def on_done(
+        self,
+        ok: bool,
+        latency_s: float,
+        queue_wait_s: float,
+        worker: Optional[int],
+        expired: bool = False,
+    ) -> None:
+        with self._lock:
+            if ok:
+                self.completed += 1
+            else:
+                self.failed += 1
+                if expired:
+                    self.expired += 1
+            nw = len(self.per_worker_served)
+            if worker is not None and 0 <= worker < nw:
+                self.per_worker_served[worker] += 1
+            self._sample(self._latencies, latency_s)
+            self._sample(self._queue_waits, queue_wait_s)
+
+    def _sample(self, reservoir: list, x) -> None:
+        if len(reservoir) >= _MAX_SAMPLES:
+            # drop the oldest half: cheap, keeps recent behaviour
+            del reservoir[: _MAX_SAMPLES // 2]
+        reservoir.append(x)
+
+    # -- reading -------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        # one lock span: counters and reservoirs must come from the
+        # same instant, or completed=N could pair with N-1 samples
+        with self._lock:
+            lat = sorted(self._latencies)
+            wait = sorted(self._queue_waits)
+            depth = list(self._depth_samples)
+            out = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "expired": self.expired,
+                "rejected": self.rejected,
+                "retried": self.retried,
+                "per_worker_served": list(self.per_worker_served),
+            }
+        mean_depth = sum(depth) / len(depth) if depth else 0.0
+        out.update(
+            {
+                "latency_p50_s": round(percentile(lat, 50), 6),
+                "latency_p99_s": round(percentile(lat, 99), 6),
+                "queue_wait_p50_s": round(percentile(wait, 50), 6),
+                "queue_wait_p99_s": round(percentile(wait, 99), 6),
+                "queue_depth_max": max(depth, default=0),
+                "queue_depth_mean": round(mean_depth, 3),
+            }
+        )
+        return out

@@ -1,0 +1,131 @@
+"""Admission queue for the multi-mesh serving tier.
+
+A bounded, thread-safe priority queue of :class:`Ticket` objects. Lower
+``priority`` values dispatch first; ties dispatch in admission order
+(the sequence number doubles as the tiebreak, so a *retried* ticket —
+which keeps its original sequence number — goes back to the front of
+its priority class instead of behind newer work).
+
+Deadlines are carried on the ticket and *checked by the consumers*
+(dispatcher and workers), not enforced here: expiry must produce a
+structured error result, which only the server can resolve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional, Set
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One admitted request plus its serving state.
+
+    ``deadline`` and ``timeout_s`` are distinct knobs: the deadline is
+    an absolute completion bound (expired tickets resolve to a
+    structured ``deadline_exceeded`` error without running), while
+    ``timeout_s`` bounds one *attempt* on one worker (a timed-out
+    attempt marks that worker wedged and retries elsewhere).
+    """
+
+    request: object  # PartitionRequest
+    priority: int
+    seq: int
+    future: Future
+    submit_t: float  # monotonic admission time
+    deadline: Optional[float] = None  # absolute monotonic deadline
+    timeout_s: Optional[float] = None  # per-attempt run timeout
+    need: int = 1  # PE count the resolved backend wants
+    attempts: int = 0  # failed attempts so far
+    excluded: Set[int] = dataclasses.field(default_factory=set)
+    worker: Optional[int] = None  # worker currently assigned
+    dispatch_t: Optional[float] = None  # first leave-the-queue time
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline is None:
+            return False
+        return (time.monotonic() if now is None else now) >= self.deadline
+
+    def remaining(self, now: Optional[float] = None) -> Optional[float]:
+        """Seconds until the deadline (None when unbounded)."""
+        if self.deadline is None:
+            return None
+        now = time.monotonic() if now is None else now
+        return max(0.0, self.deadline - now)
+
+
+class AdmissionQueue:
+    """Bounded priority queue; ``put`` returns False when full/closed.
+
+    ``requeue`` bypasses the capacity bound: a retried ticket was
+    already admitted once, and dropping it on a full queue would turn
+    the retry guarantee into a coin flip under load.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._heap: list = []  # (priority, seq, ticket)
+        self._cond = threading.Condition()
+        self._closed = False
+
+    def put(self, ticket: Ticket) -> bool:
+        with self._cond:
+            if self._closed or len(self._heap) >= self.capacity:
+                return False
+            heapq.heappush(self._heap, (ticket.priority, ticket.seq, ticket))
+            self._cond.notify()
+            return True
+
+    def requeue(self, ticket: Ticket) -> bool:
+        with self._cond:
+            if self._closed:
+                return False
+            heapq.heappush(self._heap, (ticket.priority, ticket.seq, ticket))
+            self._cond.notify()
+            return True
+
+    def pop(self, timeout: Optional[float] = None) -> Optional[Ticket]:
+        """Highest-priority ticket, or None on timeout / empty queue."""
+        with self._cond:
+            if not self._heap:
+                self._cond.wait(timeout)
+            if not self._heap:
+                return None
+            return heapq.heappop(self._heap)[2]
+
+    def pop_matching(self, pred) -> Optional[Ticket]:
+        """Remove and return the highest-priority ticket satisfying
+        ``pred``, or None (without blocking). This is what lets the
+        dispatcher skip a ticket whose eligible meshes are all busy and
+        serve the next one — instead of head-of-line blocking the whole
+        queue behind it."""
+        with self._cond:
+            for entry in sorted(self._heap):
+                if pred(entry[2]):
+                    self._heap.remove(entry)
+                    heapq.heapify(self._heap)
+                    return entry[2]
+            return None
+
+    def drain(self) -> List[Ticket]:
+        """Remove and return every queued ticket (close-time cleanup)."""
+        with self._cond:
+            out = [t for _, _, t in self._heap]
+            self._heap.clear()
+            return out
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._heap)
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()

@@ -1,0 +1,614 @@
+"""Multi-mesh partition server: queued serving over device-mesh workers.
+
+``PartitionServer`` is the traffic-shaped layer above the PR 2 facade
+(saxml-style: an admission queue feeding several independent device
+groups). It owns N *workers*, each bound to a disjoint slice of the
+host's devices wrapped in its own ``PartitionSession`` (one mesh, one
+ShardCtx, one jit cache per worker); a priority admission queue with
+per-request deadlines; a dispatcher that routes each request to the
+best-fitting mesh (``serve.scheduler``, reusing the ``auto`` policy's
+``required_devices``); a ``GraphSpec`` cache shared across all workers;
+and supervision — a failed or timed-out attempt is retried once on
+another mesh, then surfaced as a structured :class:`ServeResult` error.
+
+Results are bit-identical to solo ``Partitioner.run`` for the same
+request: workers run the unmodified facade, and every request is a pure
+function of its fields regardless of which device slice executes it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutureTimeout
+from queue import SimpleQueue
+from typing import Any, Dict, Iterable, List, Optional
+
+from ..api.backends import required_devices
+from ..api.session import PartitionSession
+from .metrics import ServeMetrics
+from .queue import AdmissionQueue, Ticket
+from .scheduler import pick_worker
+
+_STOP = object()  # worker-inbox sentinel
+
+# structured error codes a ServeResult can carry
+ERR_DEADLINE = "deadline_exceeded"
+ERR_WORKER = "worker_failed"
+ERR_NO_WORKER = "no_worker"
+ERR_REJECTED = "rejected"
+ERR_CLOSED = "server_closed"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Outcome of one served request: a ``PartitionResult`` on success,
+    a structured error otherwise — queue failures are *data*, never
+    exceptions leaking out of worker threads.
+    """
+
+    ok: bool
+    result: Optional[object]  # PartitionResult when ok
+    error: Optional[str]  # ERR_* code when not ok
+    detail: str = ""
+    worker: Optional[int] = None  # worker that produced the result
+    attempts: int = 0  # run attempts consumed
+    priority: int = 0
+    queue_wait_s: float = 0.0  # admission -> first dispatch
+    total_s: float = 0.0  # admission -> resolution
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-serializable one-liner (no assignment array)."""
+        out: Dict[str, Any] = {
+            "ok": self.ok,
+            "worker": self.worker,
+            "attempts": self.attempts,
+            "priority": self.priority,
+            "queue_wait_s": self.queue_wait_s,
+            "total_s": self.total_s,
+        }
+        if self.ok and self.result is not None:
+            out["cut"] = self.result.cut
+            out["feasible"] = self.result.feasible
+            out["backend"] = self.result.backend
+        else:
+            out["error"] = self.error
+            out["detail"] = self.detail
+        return out
+
+
+class _Worker:
+    """One mesh worker: a dedicated single-thread ``PartitionSession``
+    (the executor) plus a supervisor loop (this thread) that enforces
+    per-attempt timeouts and reports failures back to the server.
+
+    ``hold()`` / ``release()`` gate the loop before each attempt — the
+    supervision hook the selftest uses to kill a worker while it
+    provably still owns a request.
+    """
+
+    def __init__(
+        self,
+        wid: int,
+        devices: int,
+        mesh,
+        backend: Optional[str],
+        server: "PartitionServer",
+    ):
+        self.wid = wid
+        self.devices = devices
+        self.mesh = mesh
+        self.alive = True
+        self.inflight = 0  # guarded by server._cap_cond
+        self.session = PartitionSession(
+            devices=devices,
+            backend=backend,
+            max_workers=1,
+            mesh=mesh,
+            graph_cache=server._graph_cache,
+            graph_cache_lock=server._graph_cache_lock,
+        )
+        self.inbox: SimpleQueue = SimpleQueue()
+        self._gate = threading.Event()
+        self._gate.set()
+        self._abandoned: Optional[Future] = None
+        self._server = server
+        self.thread = threading.Thread(
+            target=self._loop,
+            name=f"repro-serve-w{wid}",
+            daemon=True,
+        )
+
+    def start(self) -> None:
+        self.thread.start()
+
+    def hold(self) -> None:
+        self._gate.clear()
+
+    def release(self) -> None:
+        self._gate.set()
+
+    @property
+    def shard_ctx(self):
+        return self.session.shard_ctx
+
+    def _loop(self) -> None:
+        while True:
+            item = self.inbox.get()
+            if item is _STOP:
+                break
+            try:
+                self._serve_one(item)
+            finally:
+                self._server._attempt_finished(self)
+
+    def _serve_one(self, ticket: Ticket) -> None:
+        srv = self._server
+        self._gate.wait()
+        if srv._closing.is_set():
+            srv._resolve_error(
+                ticket, ERR_CLOSED, "server closed before the attempt"
+            )
+            return
+        if not self.alive:
+            srv._attempt_failed(
+                ticket, self.wid, "worker killed before the attempt"
+            )
+            return
+        now = time.monotonic()
+        if ticket.expired(now):
+            srv._resolve_error(
+                ticket,
+                ERR_DEADLINE,
+                f"deadline passed before the attempt on worker {self.wid}",
+            )
+            return
+        timeout = ticket.timeout_s
+        rem = ticket.remaining(now)
+        deadline_bound = False
+        if rem is not None and (timeout is None or rem < timeout):
+            # the request's own deadline is the binding constraint: if
+            # it fires, the *request* ran out of time — the worker is
+            # slow for this job, not wedged, and must stay in rotation
+            timeout = rem
+            deadline_bound = True
+        if not self._drain_abandoned(ticket, timeout):
+            return
+        fut = self.session.submit(ticket.request)
+        try:
+            res = fut.result(timeout=timeout)
+        except _FutureTimeout:
+            if deadline_bound:
+                self._abandoned = fut
+                srv._resolve_error(
+                    ticket,
+                    ERR_DEADLINE,
+                    f"deadline passed mid-attempt on worker {self.wid}",
+                )
+                return
+            # a timeout_s overrun means the session's executor thread
+            # is wedged; take this worker out of rotation and fail over
+            self.alive = False
+            srv._attempt_failed(
+                ticket,
+                self.wid,
+                f"attempt timed out after {timeout:.3f}s"
+                " (worker marked dead)",
+            )
+            return
+        except Exception as exc:  # any failure must become data
+            srv._attempt_failed(
+                ticket, self.wid, f"{type(exc).__name__}: {exc}"
+            )
+            return
+        srv._resolve_ok(ticket, res, self.wid)
+
+    def _drain_abandoned(self, ticket: Ticket, budget) -> bool:
+        """A deadline-abandoned attempt keeps the session's executor
+        thread busy after its ticket resolved. Its runtime is *this
+        worker's backlog*, not the next attempt's cost — so drain it
+        before starting (and timing) a fresh attempt. If the drain
+        exceeds the new ticket's budget the mesh simply can't take the
+        job in time: fail over WITHOUT marking the worker dead (the
+        executor is making progress on real work, not wedged). Returns
+        False when the ticket was already resolved/failed over."""
+        if self._abandoned is None:
+            return True
+        try:
+            self._abandoned.result(timeout=budget)
+        except _FutureTimeout:
+            self._server._attempt_failed(
+                ticket,
+                self.wid,
+                "worker busy draining a deadline-abandoned attempt",
+            )
+            return False
+        except Exception:
+            pass  # the abandoned job failed; the executor is free
+        self._abandoned = None
+        return True
+
+
+class PartitionServer:
+    """Queued multi-mesh serving tier over the ``repro.api`` facade.
+
+    Parameters
+    ----------
+    meshes:
+        Number of worker meshes. With ``devices_per_mesh > 1`` the
+        host's devices are carved into that many *disjoint* contiguous
+        slices (``api.runtime.device_slices``; raises when the host is
+        too small). With ``devices_per_mesh == 1`` workers are meshless
+        single-device sessions — any host, no carving.
+    devices_per_mesh:
+        PE count of every worker mesh. Requests whose resolved backend
+        wants exactly this many PEs reuse the worker's shared mesh;
+        anything else still runs correctly, as a solo run would.
+    backend:
+        Optional registry name replacing each request's ``"auto"``.
+    max_queue:
+        Admission-queue capacity; submissions beyond it resolve to a
+        structured ``rejected`` error instead of blocking the caller.
+    max_retries:
+        Failed/timed-out attempts per request before the error is
+        surfaced (default 1: one retry on a *different* mesh).
+    max_inflight_per_worker:
+        Attempts a worker may own at once (assigned + running). The
+        default of 1 keeps requests in the priority queue — where
+        scheduling decisions are still possible — rather than in
+        per-worker inboxes.
+    """
+
+    def __init__(
+        self,
+        meshes: int = 2,
+        devices_per_mesh: int = 1,
+        backend: Optional[str] = None,
+        max_queue: int = 1024,
+        max_retries: int = 1,
+        max_inflight_per_worker: int = 1,
+    ):
+        if meshes < 1:
+            raise ValueError(f"meshes must be >= 1, got {meshes}")
+        if devices_per_mesh < 1:
+            raise ValueError(
+                f"devices_per_mesh must be >= 1, got {devices_per_mesh}"
+            )
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if max_inflight_per_worker < 1:
+            raise ValueError(
+                "max_inflight_per_worker must be >= 1, got "
+                f"{max_inflight_per_worker}"
+            )
+        self.devices_per_mesh = devices_per_mesh
+        self._backend = backend
+        self._max_retries = max_retries
+        self._max_inflight = max_inflight_per_worker
+        self._graph_cache: dict = {}
+        self._graph_cache_lock = threading.Lock()
+        if devices_per_mesh > 1:
+            # disjoint contiguous device slices, one 1D 'pe' mesh each
+            import numpy as np
+            from jax.sharding import Mesh
+
+            from ..api.runtime import device_slices
+
+            slices = device_slices(meshes, devices_per_mesh)
+            mesh_objs = [Mesh(np.array(s), ("pe",)) for s in slices]
+        else:
+            mesh_objs = [None] * meshes
+        self._workers = [
+            _Worker(i, devices_per_mesh, mesh_objs[i], backend, self)
+            for i in range(meshes)
+        ]
+        self._queue = AdmissionQueue(capacity=max_queue)
+        self._metrics = ServeMetrics(meshes)
+        self._cap_cond = threading.Condition()
+        self._seq_lock = threading.Lock()
+        self._seq = 0
+        self._closing = threading.Event()
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop,
+            name="repro-serve-dispatch",
+            daemon=True,
+        )
+        for w in self._workers:
+            w.start()
+        self._dispatcher.start()
+
+    # -- admission -----------------------------------------------------
+
+    def submit(
+        self,
+        request,
+        *,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
+        timeout_s: Optional[float] = None,
+    ) -> "Future[ServeResult]":
+        """Admit one request; returns a future resolving to a
+        :class:`ServeResult` (admission overload resolves it
+        immediately with a ``rejected`` error). Lower ``priority``
+        dispatches first; ``deadline_s``/``timeout_s`` are relative
+        seconds from now (see :class:`Ticket`)."""
+        if self._closing.is_set():
+            raise RuntimeError("server is closed")
+        request.validate()
+        # route on the backend that will actually run: the server-level
+        # override replaces "auto" exactly as the worker sessions do.
+        # Graph and GraphSpec both expose n — no materialization here.
+        eff = request
+        if self._backend is not None and request.backend == "auto":
+            eff = dataclasses.replace(request, backend=self._backend)
+        need = required_devices(eff, request.graph.n)
+        now = time.monotonic()
+        fut: "Future[ServeResult]" = Future()
+        with self._seq_lock:
+            seq = self._seq
+            self._seq += 1
+        ticket = Ticket(
+            request=request,
+            priority=priority,
+            seq=seq,
+            future=fut,
+            submit_t=now,
+            deadline=None if deadline_s is None else now + deadline_s,
+            timeout_s=timeout_s,
+            need=need,
+        )
+        if not self._queue.put(ticket):
+            if self._closing.is_set():
+                # lost the race against close(): the queue refused the
+                # ticket because it is closed, not because it is full
+                fut.set_result(
+                    ServeResult(
+                        ok=False,
+                        result=None,
+                        error=ERR_CLOSED,
+                        detail="server closed during submit",
+                        priority=priority,
+                    )
+                )
+                return fut
+            self._metrics.on_reject()
+            cap = self._queue.capacity
+            fut.set_result(
+                ServeResult(
+                    ok=False,
+                    result=None,
+                    error=ERR_REJECTED,
+                    detail=f"admission queue full (capacity {cap})",
+                    priority=priority,
+                )
+            )
+            return fut
+        self._metrics.on_submit(self._queue.depth())
+        with self._cap_cond:
+            self._cap_cond.notify_all()
+        return fut
+
+    def serve(self, requests: Iterable, **submit_kw) -> List[ServeResult]:
+        """Admit a batch and block for all results, in request order."""
+        futures = [self.submit(r, **submit_kw) for r in requests]
+        return [f.result() for f in futures]
+
+    # -- dispatch ------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        # the dispatcher never blocks on a single ticket: each pass
+        # pops the best ticket that *some free eligible mesh* can take
+        # right now (pop_matching), so a retried ticket whose only
+        # remaining mesh is busy cannot head-of-line block work that
+        # an idle mesh could serve
+        while not self._closing.is_set():
+            if not self._dispatch_once():
+                with self._cap_cond:
+                    self._cap_cond.wait(0.05)
+
+    def _dispatch_once(self) -> bool:
+        """One dispatch action; False when there is nothing to do."""
+        # deadlines first: an expired ticket resolves without a mesh
+        ticket = self._queue.pop_matching(Ticket.expired)
+        if ticket is not None:
+            self._metrics.on_dispatch(self._queue.depth())
+            self._resolve_error(ticket, ERR_DEADLINE, "expired in queue")
+            return True
+        with self._cap_cond:
+            alive = {w.wid for w in self._workers if w.alive}
+            free = {
+                w.wid
+                for w in self._workers
+                if w.alive and w.inflight < self._max_inflight
+            }
+        # tickets whose every eligible mesh is dead can never be served
+        ticket = self._queue.pop_matching(lambda t: not (alive - t.excluded))
+        if ticket is not None:
+            detail = "; ".join(ticket.errors) or "no live worker"
+            self._resolve_error(ticket, ERR_NO_WORKER, detail)
+            return True
+        if not free:
+            return False
+        ticket = self._queue.pop_matching(lambda t: bool(free - t.excluded))
+        if ticket is None:
+            return False
+        self._metrics.on_dispatch(self._queue.depth())
+        if ticket.dispatch_t is None:
+            ticket.dispatch_t = time.monotonic()
+        self._assign_now(ticket)
+        return True
+
+    def _assign_now(self, ticket: Ticket) -> None:
+        """Hand the ticket to the best free eligible worker; if the
+        free set changed under us (a concurrent kill), requeue — the
+        next pass re-routes it."""
+        with self._cap_cond:
+            cands = [
+                w
+                for w in self._workers
+                if w.alive and w.inflight < self._max_inflight
+            ]
+            cands = [w for w in cands if w.wid not in ticket.excluded]
+            chosen = pick_worker(ticket.need, cands)
+            if chosen is not None:
+                chosen.inflight += 1
+        if chosen is None:
+            if not self._queue.requeue(ticket):
+                self._resolve_error(
+                    ticket, ERR_CLOSED, "server closed during dispatch"
+                )
+            return
+        ticket.worker = chosen.wid
+        chosen.inbox.put(ticket)
+
+    # -- worker callbacks ----------------------------------------------
+
+    def _attempt_finished(self, worker: _Worker) -> None:
+        with self._cap_cond:
+            worker.inflight -= 1
+            self._cap_cond.notify_all()
+
+    def _attempt_failed(self, ticket: Ticket, wid: int, detail: str) -> None:
+        """Supervision: record the failure, retry on another mesh when
+        the budget and the fleet allow it, else surface the error."""
+        ticket.errors.append(f"worker {wid}: {detail}")
+        ticket.excluded.add(wid)
+        ticket.attempts += 1
+        can_retry = (
+            ticket.attempts <= self._max_retries
+            and not self._closing.is_set()
+        )
+        if can_retry:
+            with self._cap_cond:
+                elsewhere = any(
+                    w.alive and w.wid not in ticket.excluded
+                    for w in self._workers
+                )
+            can_retry = elsewhere
+        if can_retry and self._queue.requeue(ticket):
+            self._metrics.on_retry()
+            return
+        self._resolve_error(ticket, ERR_WORKER, "; ".join(ticket.errors))
+
+    # -- resolution ----------------------------------------------------
+
+    def _resolve_ok(self, ticket: Ticket, result, wid: int) -> None:
+        now = time.monotonic()
+        qw = (ticket.dispatch_t or now) - ticket.submit_t
+        total = now - ticket.submit_t
+        self._metrics.on_done(True, total, qw, wid)
+        self._set(
+            ticket.future,
+            ServeResult(
+                ok=True,
+                result=result,
+                error=None,
+                worker=wid,
+                attempts=ticket.attempts + 1,
+                priority=ticket.priority,
+                queue_wait_s=round(qw, 6),
+                total_s=round(total, 6),
+            ),
+        )
+
+    def _resolve_error(self, ticket: Ticket, code: str, detail: str) -> None:
+        now = time.monotonic()
+        qw = (ticket.dispatch_t or now) - ticket.submit_t
+        total = now - ticket.submit_t
+        self._metrics.on_done(
+            False, total, qw, None, expired=code == ERR_DEADLINE
+        )
+        self._set(
+            ticket.future,
+            ServeResult(
+                ok=False,
+                result=None,
+                error=code,
+                detail=detail,
+                worker=None,
+                attempts=ticket.attempts,
+                priority=ticket.priority,
+                queue_wait_s=round(qw, 6),
+                total_s=round(total, 6),
+            ),
+        )
+
+    @staticmethod
+    def _set(fut: Future, res: ServeResult) -> None:
+        try:
+            fut.set_result(res)
+        except Exception:  # cancelled by the caller — drop the result
+            pass
+
+    # -- introspection / supervision -----------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        snap = self._metrics.snapshot()
+        served = snap["per_worker_served"]
+        snap.update(
+            {
+                "meshes": len(self._workers),
+                "devices_per_mesh": self.devices_per_mesh,
+                "queue_depth": self._queue.depth(),
+                "workers": [
+                    {
+                        "wid": w.wid,
+                        "devices": w.devices,
+                        "alive": w.alive,
+                        "inflight": w.inflight,
+                        "served": served[w.wid],
+                    }
+                    for w in self._workers
+                ],
+            }
+        )
+        return snap
+
+    @property
+    def workers(self) -> List[_Worker]:
+        return list(self._workers)
+
+    def kill_worker(self, wid: int) -> None:
+        """Take worker ``wid`` out of rotation. Attempts it still owns
+        (and any it would have started) fail over to other meshes via
+        the normal retry path — takes effect before the worker's next
+        attempt starts; it cannot interrupt a running jit program."""
+        w = self._workers[wid]
+        with self._cap_cond:
+            w.alive = False
+            self._cap_cond.notify_all()
+        w.release()  # free a held worker so its ticket can fail over
+
+    # -- lifecycle -----------------------------------------------------
+
+    def close(self, wait: bool = True) -> None:
+        """Stop admission, resolve every queued ticket with a
+        ``server_closed`` error, and shut workers down. Attempts already
+        running complete normally when ``wait`` is True (wedged/timed-out
+        workers are never waited on)."""
+        if self._closing.is_set():
+            return
+        self._closing.set()
+        self._queue.close()
+        for t in self._queue.drain():
+            self._resolve_error(t, ERR_CLOSED, "server closed before dispatch")
+        with self._cap_cond:
+            self._cap_cond.notify_all()
+        self._dispatcher.join(timeout=5.0)
+        for w in self._workers:
+            w.inbox.put(_STOP)
+            w.release()
+        if wait:
+            for w in self._workers:
+                if w.alive:
+                    w.thread.join(timeout=30.0)
+        for w in self._workers:
+            w.session.close(wait=wait and w.alive)
+
+    def __enter__(self) -> "PartitionServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -7,7 +7,7 @@ corpora is an offset manifest in the checkpoint; the interface below
 carries the offset through ``state['data_step']``)."""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 

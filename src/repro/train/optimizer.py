@@ -7,11 +7,9 @@ matrix, which is what lets arctic-480b fit a v5e-256 pod (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

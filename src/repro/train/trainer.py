@@ -17,14 +17,11 @@ layers the production concerns on top:
 from __future__ import annotations
 
 import dataclasses
-import os
-import signal
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import checkpoint
 from .optimizer import OptConfig, clip_by_global_norm, make_optimizer

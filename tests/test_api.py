@@ -4,7 +4,6 @@ equivalence, batched sessions, runtime helpers.
 Multi-device facade coverage lives in test_distributed.py (subprocess
 selftest ``--test api``); here the dist backends run at P=1 in-process.
 """
-import warnings
 
 import numpy as np
 import pytest
@@ -135,25 +134,33 @@ def test_driver_rejects_bad_k(g):
 
 
 # ---------------------------------------------------------------------------
-# old-vs-new equivalence + deprecation shims
+# facade-vs-driver equivalence + shim removal
 # ---------------------------------------------------------------------------
 
-def test_single_matches_legacy_entrypoint(g, single_result):
-    from repro.core.partitioner import partition as legacy
-    with pytest.warns(DeprecationWarning):
-        want = legacy(g, 8, config=CFG)
+def test_single_matches_driver(g, single_result):
+    want = driver_partition(g, 8, CFG)
     assert np.array_equal(single_result.assignment, want)
 
 
-def test_dist_p1_matches_legacy_entrypoint(g):
-    from repro.dist.dist_partitioner import dist_partition as legacy
-    with pytest.warns(DeprecationWarning):
-        want = legacy(g, 4, 1, cfg=CFG)     # grid routing default
+def test_dist_p1_matches_driver(g):
+    from repro.dist.dist_partitioner import dist_partition_impl
+    want = dist_partition_impl(g, 4, 1, cfg=CFG, use_grid=True)
     res = Partitioner().run(
         PartitionRequest(graph=g, k=4, config=CFG, backend="dist-grid",
                          devices=1))
     assert np.array_equal(res.assignment, want)
     assert res.feasible
+
+
+def test_deprecated_shims_are_gone():
+    """The PR 2 deprecation shims had one release of grace (docs/API.md)
+    and must no longer exist — the facade is the only entrypoint."""
+    from repro.core import partitioner as core_partitioner
+    from repro.dist import dist_partitioner
+    assert not hasattr(core_partitioner, "partition")
+    assert not hasattr(dist_partitioner, "dist_partition")
+    import repro.core
+    assert not hasattr(repro.core, "partition")
 
 
 def test_dist_p1_sharded_owner_memory_model(g):

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import PartitionerConfig, fast_config, partition
+from repro.core import PartitionerConfig
 from repro.core import baselines, metrics
+from repro.core.deep_mgp import partition as driver_partition
 from repro.core.coarsening import cluster, enforce_cluster_weights
 from repro.core.contraction import contract
 from repro.core.deep_mgp import ceil2, extract_block_subgraphs
@@ -33,7 +34,7 @@ def rhg():
 @pytest.mark.parametrize("k", [2, 7, 16, 64])
 def test_always_feasible(family, k):
     g = generators.make(family, 2500, 8.0, seed=11)
-    part = partition(g, k, config=SMALL_CFG)
+    part = driver_partition(g, k, SMALL_CFG)
     assert part.shape == (g.n,)
     assert part.min() >= 0 and part.max() < k
     assert metrics.is_feasible(g, part, k, 0.03), \
@@ -43,7 +44,7 @@ def test_always_feasible(family, k):
 def test_feasible_weighted_instance():
     g = generators.weighted_variant(
         generators.make("rgg2d", 3000, 8.0, seed=5), seed=6)
-    part = partition(g, 16, config=SMALL_CFG)
+    part = driver_partition(g, 16, SMALL_CFG)
     assert metrics.is_feasible(g, part, 16, 0.03)
 
 
@@ -52,7 +53,7 @@ def test_feasible_large_k_small_C():
     g = generators.make("rgg2d", 6000, 8.0, seed=7)
     cfg = PartitionerConfig(contraction_limit=32, ip_repetitions=1,
                             num_chunks=4)
-    part = partition(g, 256, config=cfg)
+    part = driver_partition(g, 256, cfg)
     s = metrics.summarize(g, part, 256, 0.03)
     assert s["feasible"], s
     assert s["nonempty_blocks"] == 256
@@ -63,7 +64,7 @@ def test_feasible_large_k_small_C():
 # ---------------------------------------------------------------------------
 
 def test_quality_beats_single_level(rgg):
-    p_deep = partition(rgg, 8, config=SMALL_CFG)
+    p_deep = driver_partition(rgg, 8, SMALL_CFG)
     p_flat = baselines.single_level_lp(rgg, 8, seed=1)
     cut_deep = metrics.edge_cut(rgg, p_deep)
     cut_flat = metrics.edge_cut(rgg, p_flat)
@@ -71,7 +72,7 @@ def test_quality_beats_single_level(rgg):
 
 
 def test_quality_comparable_to_plain_mgp(rhg):
-    p_deep = partition(rhg, 8, config=SMALL_CFG)
+    p_deep = driver_partition(rhg, 8, SMALL_CFG)
     p_plain = baselines.plain_mgp(rhg, 8, cfg=SMALL_CFG)
     cut_deep = metrics.edge_cut(rhg, p_deep)
     cut_plain = metrics.edge_cut(rhg, p_plain)

@@ -75,6 +75,28 @@ def test_balance_2dev():
     assert all(r["pass"] for r in res), res
 
 
+def test_serve_2dev():
+    """Fast (non-slow) serving-tier coverage: a 2-mesh PartitionServer
+    (one device each) drains 8 concurrent mixed-size requests
+    bit-identically to solo runs, fails a killed worker's requests over
+    to the other mesh, and surfaces deadline expiry as a structured
+    error."""
+    res = run_selftest("--devices", "2", "--n", "800", "--k", "4",
+                       "--test", "serve")
+    assert len(res) == 4, res
+    assert all(r["pass"] for r in res), res
+
+
+@pytest.mark.slow
+def test_serve_4dev_multidevice_meshes():
+    """Serving tier with genuinely multi-device worker meshes: two
+    disjoint 2-device slices, distributed requests routed by fit."""
+    res = run_selftest("--devices", "4", "--n", "1600", "--k", "4",
+                       "--test", "serve")
+    assert len(res) == 4, res
+    assert all(r["pass"] for r in res), res
+
+
 @pytest.mark.slow
 def test_halo_8dev():
     """Ghost-vertex exchange must reproduce the single-process graph's

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
 interpret=True (CPU) against pure-jnp oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -23,7 +22,7 @@ except ImportError:  # property tests skip (not error) without hypothesis
     st = _NullStrategies()
 
 from repro.graphs import generators
-from repro.kernels.bsr_spmm.ops import graph_to_bsr, spmm
+from repro.kernels.bsr_spmm.ops import spmm
 from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
 from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_1row

@@ -1,6 +1,5 @@
 """Placement engine: the paper's technique wired into the framework."""
 import numpy as np
-import pytest
 
 from repro.core.partitioner import PartitionerConfig
 from repro.graphs import generators

@@ -1,0 +1,420 @@
+"""repro.serve serving tier: scheduler policy, admission queue,
+bit-identity under concurrency, and the failure paths (worker
+exception, deadline expiry, kill/retry, admission overload).
+
+Multi-device mesh coverage lives in test_distributed.py (subprocess
+selftest ``--test serve``); here workers are meshless single-device
+sessions, which exercises every queue/scheduler/supervision path.
+"""
+import threading
+import time
+from concurrent.futures import Future
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.api import (GraphSpec, PartitionRequest, Partitioner,
+                       register_backend)
+from repro.api.backends import required_devices
+from repro.core import PartitionerConfig
+from repro.serve import (AdmissionQueue, PartitionServer, ServeMetrics,
+                         Ticket, pick_worker)
+from repro.serve.metrics import percentile
+
+CFG = PartitionerConfig(contraction_limit=128, ip_repetitions=2,
+                        num_chunks=4)
+
+
+def mixed_requests(count=8, base_n=700):
+    return [PartitionRequest(
+        graph=GraphSpec("rgg2d", base_n * (1 + i % 3), 8.0,
+                        seed=5 + i % 2),
+        k=2 * (1 + i % 2), config=CFG, backend="single")
+        for i in range(count)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy (pure)
+# ---------------------------------------------------------------------------
+
+def W(wid, devices, inflight=0):
+    return SimpleNamespace(wid=wid, devices=devices, inflight=inflight)
+
+
+def test_scheduler_prefers_exact_mesh_match():
+    ws = [W(0, 8), W(1, 2), W(2, 4)]
+    assert pick_worker(2, ws).wid == 1
+    assert pick_worker(4, ws).wid == 2
+    assert pick_worker(8, ws).wid == 0
+
+
+def test_scheduler_smallest_fitting_then_fallback():
+    ws = [W(0, 8), W(1, 4)]
+    # no exact 2-PE mesh: smallest mesh that fits wins
+    assert pick_worker(2, ws).wid == 1
+    # nothing fits a 16-PE ask: any mesh still serves it (undersized
+    # meshes run the request without the shared mesh)
+    assert pick_worker(16, ws).wid == 0
+
+
+def test_scheduler_load_and_id_tiebreaks():
+    assert pick_worker(1, [W(0, 1, inflight=1), W(1, 1)]).wid == 1
+    assert pick_worker(1, [W(0, 1), W(1, 1)]).wid == 0
+    assert pick_worker(1, []) is None
+
+
+def test_required_devices_follows_auto_policy():
+    spec = GraphSpec("rgg2d", 50000)
+    assert required_devices(
+        PartitionRequest(graph=spec, k=4), 50000) == 1
+    assert required_devices(
+        PartitionRequest(graph=spec, k=4, devices=4), 50000) == 4
+    # too small to shard -> the dist backends are never resolved
+    assert required_devices(
+        PartitionRequest(graph=spec, k=4, devices=4), 100) == 1
+    assert required_devices(
+        PartitionRequest(graph=spec, k=4, backend="single", devices=4),
+        50000) == 1
+
+
+# ---------------------------------------------------------------------------
+# admission queue (pure)
+# ---------------------------------------------------------------------------
+
+def make_ticket(priority, seq, deadline=None):
+    return Ticket(request=None, priority=priority, seq=seq,
+                  future=Future(), submit_t=time.monotonic(),
+                  deadline=deadline)
+
+
+def test_queue_priority_then_fifo_order():
+    q = AdmissionQueue(capacity=8)
+    for prio, seq in [(1, 0), (0, 1), (1, 2), (0, 3)]:
+        assert q.put(make_ticket(prio, seq))
+    got = [q.pop() for _ in range(4)]
+    assert [(t.priority, t.seq) for t in got] == \
+        [(0, 1), (0, 3), (1, 0), (1, 2)]
+
+
+def test_queue_requeue_goes_to_front_of_its_class():
+    q = AdmissionQueue(capacity=8)
+    first = make_ticket(0, 0)
+    q.put(first)
+    q.put(make_ticket(0, 1))
+    t = q.pop()
+    assert t is first
+    assert q.requeue(t)           # keeps seq 0 -> ahead of seq 1
+    assert q.pop() is first
+
+
+def test_queue_capacity_and_close():
+    q = AdmissionQueue(capacity=2)
+    assert q.put(make_ticket(0, 0))
+    assert q.put(make_ticket(0, 1))
+    assert not q.put(make_ticket(0, 2))      # full
+    assert q.requeue(make_ticket(0, 3))      # retries bypass the bound
+    q.close()
+    assert not q.put(make_ticket(0, 4))
+    assert len(q.drain()) == 3
+    assert q.depth() == 0
+
+
+def test_ticket_deadline():
+    now = time.monotonic()
+    t = make_ticket(0, 0, deadline=now - 1)
+    assert t.expired()
+    t2 = make_ticket(0, 0, deadline=now + 60)
+    assert not t2.expired()
+    assert 0 < t2.remaining() <= 60
+    assert make_ticket(0, 0).remaining() is None
+
+
+def test_metrics_percentile_and_snapshot():
+    assert percentile([], 50) == 0.0
+    xs = sorted(float(i) for i in range(1, 101))
+    assert percentile(xs, 50) == pytest.approx(50.0, abs=1)
+    assert percentile(xs, 99) == pytest.approx(99.0, abs=1)
+    m = ServeMetrics(2)
+    m.on_submit(3)
+    m.on_done(True, 0.5, 0.1, worker=1)
+    snap = m.snapshot()
+    assert snap["submitted"] == 1 and snap["completed"] == 1
+    assert snap["per_worker_served"] == [0, 1]
+    assert snap["queue_depth_max"] == 3
+
+
+# ---------------------------------------------------------------------------
+# server: bit-identity under concurrency
+# ---------------------------------------------------------------------------
+
+def test_concurrent_mixed_batch_bit_identical_to_solo():
+    reqs = mixed_requests(8)
+    with PartitionServer(meshes=2) as srv:
+        results = srv.serve(reqs)
+        stats = srv.stats()
+    solo = Partitioner().run_batch(reqs)
+    for r, s in zip(results, solo):
+        assert r.ok and r.error is None
+        assert np.array_equal(r.result.assignment, s.assignment)
+        assert r.result.cut == s.cut
+    assert stats["completed"] == len(reqs)
+    assert sum(stats["per_worker_served"]) == len(reqs)
+    assert all(c > 0 for c in stats["per_worker_served"])
+
+
+def test_graph_cache_shared_across_workers():
+    spec = GraphSpec("rgg2d", 900, 8.0, seed=9)
+    reqs = [PartitionRequest(graph=spec, k=k, config=CFG,
+                             backend="single") for k in (2, 3, 4, 5)]
+    with PartitionServer(meshes=2) as srv:
+        results = srv.serve(reqs)
+        assert len(srv._graph_cache) == 1   # one spec -> one materialize
+    assert all(r.ok for r in results)
+
+
+# ---------------------------------------------------------------------------
+# server: failure paths
+# ---------------------------------------------------------------------------
+
+def test_worker_exception_retries_then_structured_error():
+    calls = []
+
+    @register_backend("serve-test-boom")
+    def _boom(g, req, ctx):
+        calls.append(1)
+        raise RuntimeError("kaboom")
+
+    try:
+        good = mixed_requests(1)[0]
+        bad = PartitionRequest(graph=GraphSpec("rgg2d", 400), k=2,
+                               backend="serve-test-boom")
+        with PartitionServer(meshes=2) as srv:
+            res = srv.serve([bad])[0]
+            assert not res.ok
+            assert res.error == "worker_failed"
+            assert res.attempts == 2          # original + one retry
+            assert "kaboom" in res.detail
+            # both meshes were tried
+            assert len(calls) == 2
+            stats = srv.stats()
+            assert stats["retried"] == 1 and stats["failed"] == 1
+            # the queue is not deadlocked: a good request still serves
+            after = srv.serve([good])[0]
+            assert after.ok
+    finally:
+        from repro.api import backends as _b
+        _b._REGISTRY.pop("serve-test-boom")
+
+
+def test_deadline_expiry_returns_structured_error():
+    reqs = mixed_requests(1)
+    with PartitionServer(meshes=2) as srv:
+        for w in srv.workers:
+            w.hold()
+        fut = srv.submit(reqs[0], deadline_s=0.02)
+        time.sleep(0.15)
+        for w in srv.workers:
+            w.release()
+        res = fut.result(timeout=60)
+        assert not res.ok and res.error == "deadline_exceeded"
+        assert res.result is None
+        assert srv.stats()["expired"] == 1
+        # server still serves after the expiry
+        assert srv.serve(reqs)[0].ok
+
+
+def test_killed_worker_request_completes_on_other_mesh():
+    reqs = mixed_requests(4)
+    solo = Partitioner().run_batch(reqs)
+    with PartitionServer(meshes=2) as srv:
+        srv.workers[1].hold()
+        futs = [srv.submit(r) for r in reqs]
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline and \
+                srv.workers[1].inflight == 0:
+            time.sleep(0.01)
+        assert srv.workers[1].inflight > 0
+        srv.kill_worker(1)
+        results = [f.result(timeout=120) for f in futs]
+        stats = srv.stats()
+    for r, s in zip(results, solo):
+        assert r.ok
+        assert np.array_equal(r.result.assignment, s.assignment)
+    assert stats["retried"] >= 1
+    assert stats["per_worker_served"][1] == 0
+
+
+def test_all_workers_dead_resolves_no_worker():
+    with PartitionServer(meshes=2) as srv:
+        srv.kill_worker(0)
+        srv.kill_worker(1)
+        res = srv.serve(mixed_requests(1))[0]
+        assert not res.ok and res.error == "no_worker"
+
+
+def test_admission_overload_rejects_structurally():
+    reqs = mixed_requests(6, base_n=400)
+    with PartitionServer(meshes=1, max_queue=2) as srv:
+        srv.workers[0].hold()
+        futs = [srv.submit(r) for r in reqs]
+        rejected = [f.result(timeout=5) for f in futs
+                    if f.done() and not f.result().ok]
+        assert rejected, "queue of 2 must reject part of a burst of 6"
+        assert all(r.error == "rejected" for r in rejected)
+        srv.workers[0].release()
+        kept = [f.result(timeout=120) for f in futs]
+        assert sum(1 for r in kept if r.ok) >= 2
+        assert srv.stats()["rejected"] == len(rejected)
+
+
+def test_priorities_dispatch_before_later_arrivals():
+    done = []
+    lock = threading.Lock()
+
+    def track(tag):
+        def _cb(fut):
+            with lock:
+                done.append(tag)
+        return _cb
+
+    reqs = mixed_requests(5, base_n=400)
+    with PartitionServer(meshes=1) as srv:
+        srv.workers[0].hold()
+        # fill the worker's one slot with an untracked request so every
+        # tracked submission below provably stays in the priority queue
+        filler = srv.submit(reqs[0])
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline and \
+                srv.workers[0].inflight == 0:
+            time.sleep(0.01)
+        assert srv.workers[0].inflight == 1
+        labels = [3, 1, 2, 0]
+        futs = []
+        for r, prio in zip(reqs[1:], labels):
+            f = srv.submit(r, priority=prio)
+            f.add_done_callback(track(prio))
+            futs.append(f)
+        srv.workers[0].release()
+        filler.result(timeout=120)
+        for f in futs:
+            f.result(timeout=120)
+    assert done == sorted(labels)
+
+
+def test_deadline_mid_attempt_keeps_worker_alive():
+    """A deadline expiring during an attempt means the *request* ran
+    out of time — the worker is slow, not wedged, and must stay in
+    rotation (only a timeout_s overrun marks it dead)."""
+    release = threading.Event()
+
+    @register_backend("serve-test-slow")
+    def _slow(g, req, ctx):
+        release.wait(30)
+        return np.zeros(g.n, dtype=np.int64)
+
+    try:
+        slow = PartitionRequest(graph=GraphSpec("rgg2d", 300), k=2,
+                                backend="serve-test-slow")
+        with PartitionServer(meshes=1) as srv:
+            res = srv.serve([slow], deadline_s=0.2)[0]
+            assert not res.ok and res.error == "deadline_exceeded"
+            assert srv.workers[0].alive
+            # while the abandoned attempt still occupies the executor,
+            # a timeout-bounded request fails over (no other mesh ->
+            # structured error) but must NOT wedge the worker: the
+            # backlog is the abandoned job's, not the new attempt's
+            busy = srv.serve(mixed_requests(1, base_n=400),
+                             timeout_s=0.3)[0]
+            assert not busy.ok and busy.error == "worker_failed"
+            assert "draining" in busy.detail
+            assert srv.workers[0].alive
+            release.set()               # let the abandoned attempt end
+            good = srv.serve(mixed_requests(1, base_n=400))[0]
+            assert good.ok
+    finally:
+        release.set()
+        from repro.api import backends as _b
+        _b._REGISTRY.pop("serve-test-slow")
+
+
+def test_retried_ticket_does_not_block_queue():
+    """A requeued ticket whose only eligible mesh is busy must not
+    head-of-line block requests an idle mesh could serve."""
+
+    @register_backend("serve-test-boom2")
+    def _boom(g, req, ctx):
+        raise RuntimeError("kaboom")
+
+    try:
+        bad = PartitionRequest(graph=GraphSpec("rgg2d", 300), k=2,
+                               backend="serve-test-boom2")
+        reqs = mixed_requests(2, base_n=400)
+        with PartitionServer(meshes=2) as srv:
+            for w in srv.workers:
+                w.hold()
+            f_bad = srv.submit(bad)          # -> worker 0 (tie: lowest id)
+            f_g1 = srv.submit(reqs[0])       # -> worker 1
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline and (
+                    srv.workers[0].inflight == 0
+                    or srv.workers[1].inflight == 0):
+                time.sleep(0.01)
+            f_g2 = srv.submit(reqs[1])       # queued behind both
+            # release worker 0 only: the bad request fails there, gets
+            # requeued with excluded={0}, and its only eligible mesh
+            # (worker 1) stays held — g2 must still run on worker 0
+            srv.workers[0].release()
+            res_g2 = f_g2.result(timeout=120)
+            assert res_g2.ok
+            assert srv.workers[1].inflight == 1   # still held
+            srv.workers[1].release()
+            assert f_g1.result(timeout=120).ok
+            res_bad = f_bad.result(timeout=120)
+            assert not res_bad.ok
+            assert res_bad.error == "worker_failed"
+    finally:
+        from repro.api import backends as _b
+        _b._REGISTRY.pop("serve-test-boom2")
+
+
+def test_submit_after_close_raises():
+    srv = PartitionServer(meshes=1)
+    srv.close()
+    with pytest.raises(RuntimeError):
+        srv.submit(mixed_requests(1)[0])
+
+
+def test_close_resolves_queued_tickets():
+    srv = PartitionServer(meshes=1)
+    srv.workers[0].hold()
+    futs = [srv.submit(r) for r in mixed_requests(3, base_n=400)]
+    srv.close(wait=False)
+    srv.workers[0].release()
+    results = [f.result(timeout=60) for f in futs]
+    assert all(r.ok or r.error == "server_closed" for r in results)
+    assert any(r.error == "server_closed" for r in results)
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(meshes=0), dict(devices_per_mesh=0), dict(max_retries=-1),
+    dict(max_inflight_per_worker=0),
+])
+def test_server_rejects_bad_construction(kw):
+    with pytest.raises(ValueError):
+        PartitionServer(**kw)
+
+
+def test_session_rejects_mismatched_mesh():
+    from repro.api import PartitionSession
+
+    class FakeMesh:
+        axis_names = ("x",)
+        devices = np.zeros(2)
+
+    with pytest.raises(ValueError):
+        PartitionSession(devices=2, mesh=FakeMesh())

@@ -11,9 +11,7 @@ import pytest
 from repro.models import transformer as T
 from repro.models.common import init_params
 from repro.train import checkpoint, data
-from repro.train.optimizer import (OptConfig, adafactor_init,
-                                   adafactor_update, adamw_init,
-                                   adamw_update, clip_by_global_norm)
+from repro.train.optimizer import OptConfig, clip_by_global_norm
 from repro.train.trainer import TrainLoopConfig, make_train_step, run_loop
 
 CFG = T.TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
