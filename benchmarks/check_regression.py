@@ -6,8 +6,10 @@ gate compares them against the *committed* baselines (``git show
 HEAD:<file>`` by default, or ``--baseline-dir``) and fails the job —
 instead of only uploading artifacts — when:
 
-  * any fresh record is infeasible (``"feasible": false`` anywhere) or
-    reports failed serve requests;
+  * any fresh record is infeasible (``"feasible": false`` anywhere),
+    reports failed serve requests, reports batched serve results that
+    deviate bit-wise from solo runs (``"bit_identical": false``), or
+    reports a ``batch_speedup`` below the 2x floor;
   * a ``cut`` regresses by more than ``--tolerance`` (cuts are
     deterministic for fixed seeds, so any growth is a code change);
   * a latency/time metric regresses by more than ``--time-tolerance``
@@ -45,7 +47,11 @@ DEFAULT_FILES = ["BENCH_api.json", "BENCH_dist.json",
 TIME_KEYS = {"time_s", "wall_s", "s_per_round", "latency_p50_s",
              "latency_p99_s", "queue_wait_p50_s", "coarsen_s_total"}
 # keys gated as "higher is better" rates
-RATE_KEYS = {"throughput_rps"}
+RATE_KEYS = {"throughput_rps", "batch_speedup"}
+
+# the batched serve path must beat solo by this factor on the hot mix
+# (it is a structural win — coalescing — not a machine-speed number)
+MIN_BATCH_SPEEDUP = 2.0
 
 
 def load_baseline(name: str, ref: str,
@@ -117,6 +123,14 @@ def check_invariants(node, path: str, failures: List[str]) -> None:
                 failures.append(f"{sub}: infeasible partition")
             elif key == "failed" and isinstance(val, int) and val > 0:
                 failures.append(f"{sub}: {val} failed request(s)")
+            elif key == "bit_identical" and val is False:
+                failures.append(f"{sub}: batched results deviate from "
+                                "solo runs")
+            elif key == "batch_speedup" and isinstance(val, (int, float)) \
+                    and val < MIN_BATCH_SPEEDUP:
+                failures.append(
+                    f"{sub}: batched dispatch only {val}x solo "
+                    f"(< {MIN_BATCH_SPEEDUP}x floor)")
             else:
                 check_invariants(val, sub, failures)
     elif isinstance(node, list):

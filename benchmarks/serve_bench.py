@@ -8,6 +8,11 @@ throughput, p50/p99 end-to-end latency, queue-wait and queue-depth
 stats, and per-worker served counts — the scaling claim of the serving
 tier (adding a mesh drains the same offered load with a shorter queue)
 tracked run-over-run by ``benchmarks.check_regression``.
+
+A ``batched`` section drives a duplicate-heavy hot mix through the
+shape-bucketed batched dispatcher and the same requests solo back to
+back: the gate fails if the batched throughput falls below 2x solo or
+if any batched result deviates bit-wise from its solo run.
 """
 from __future__ import annotations
 
@@ -81,6 +86,49 @@ for meshes in (1, 2):
             "feasible": feas,
         }
     out["meshes"][str(meshes)] = per
+
+# batched dispatch on a hot mix: a duplicate-heavy burst (the serving
+# workload batching targets) against the same requests run solo back to
+# back. Identical requests coalesce into one partition run per distinct
+# request, bit-identically — the structural speedup the gate tracks.
+import numpy as np
+distinct = [PartitionRequest(
+                graph=GraphSpec("rgg2d", n // 2, 8.0, seed=61 + i),
+                k=k, config=cfg, backend="single", collect_trace=False)
+            for i in range(4)]
+mix = [distinct[i % 4] for i in range(24)]
+engine2 = Partitioner()
+solo_res = [engine2.run(r) for r in distinct]   # warm the shapes
+t0 = time.perf_counter()
+for r in mix:
+    engine2.run(r)
+solo_wall = time.perf_counter() - t0
+
+with PartitionServer(meshes=1, batch_max=32, batch_window_ms=20.0) as srv:
+    srv.workers[0].hold()           # let the burst pile up, then drain
+    t0 = time.perf_counter()
+    futs = [srv.submit(r) for r in mix]
+    srv.workers[0].release()
+    results = [f.result() for f in futs]
+    wall = time.perf_counter() - t0
+    st = srv.stats()
+bit_identical = all(
+    r.ok and np.array_equal(r.result.assignment,
+                            solo_res[i % 4].assignment)
+    for i, r in enumerate(results))
+out["batched"] = {
+    "tickets": len(mix), "distinct": len(distinct),
+    "solo_wall_s": round(solo_wall, 4),
+    "wall_s": round(wall, 4),
+    "throughput_rps": round(len(mix) / wall, 4),
+    "batch_speedup": round(solo_wall / wall, 4),
+    "bit_identical": bit_identical,
+    "latency_p50_s": st["latency_p50_s"],
+    "latency_p99_s": st["latency_p99_s"],
+    "batches": st["batches"], "coalesced": st["coalesced"],
+    "batch_size_max": st["batch_size_max"],
+    "completed": st["completed"], "failed": st["failed"],
+}
 print(json.dumps(out))
 """
 
@@ -101,6 +149,10 @@ def run(fast: bool = True, out_json: str = "BENCH_serve.json") -> Dict:
             emit(f"serve/{meshes}mesh/{load}", rec["wall_s"],
                  f"rps={rec['throughput_rps']};p99={rec['latency_p99_s']};"
                  f"depth={rec['queue_depth_max']};feas={rec['feasible']}")
+    b = result["batched"]
+    emit("serve/batched/hot_mix", b["wall_s"],
+         f"rps={b['throughput_rps']};speedup={b['batch_speedup']};"
+         f"coalesced={b['coalesced']};bit_identical={b['bit_identical']}")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(result, f, indent=1)

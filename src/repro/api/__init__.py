@@ -29,11 +29,13 @@ _EXPORTS = {
     "Partitioner": ".partitioner",
     "partition": ".partitioner",
     "PartitionSession": ".session",
+    "BucketCache": ".session",
     "BackendContext": ".backends",
     "register_backend": ".backends",
     "available_backends": ".backends",
     "get_backend": ".backends",
     "resolve_backend": ".backends",
+    "is_batchable": ".backends",
 }
 
 __all__ = sorted(_EXPORTS) + ["runtime"]

@@ -36,6 +36,12 @@ from ..graphs.format import Graph
 BackendFn = Callable[..., np.ndarray]
 
 _REGISTRY: Dict[str, BackendFn] = {}
+# names safe to serve inside a coalesced/stacked batch: deterministic
+# pure single-device backends. The distributed backends are excluded
+# (they own the mesh for the whole attempt), as are custom backends
+# unless registered with batchable=True — an unknown backend keeps the
+# solo per-request serve path and its exact retry semantics.
+_BATCHABLE: set = set()
 
 # below this many vertices per PE, sharding overhead dominates and the
 # auto policy stays single-process (mirrors the driver's own 2*P floor)
@@ -44,15 +50,30 @@ MIN_VERTICES_PER_DEVICE = 64
 GRID_ROUTING_MIN_DEVICES = 16
 
 
-def register_backend(name: str, fn: Optional[BackendFn] = None):
-    """Register ``fn`` under ``name``; usable as a decorator."""
+def register_backend(name: str, fn: Optional[BackendFn] = None, *,
+                     batchable: bool = False):
+    """Register ``fn`` under ``name``; usable as a decorator.
+
+    ``batchable=True`` declares the backend safe for the serving tier's
+    batched dispatch (pure, deterministic, single-device — see
+    ``repro.serve.batching``); the default keeps custom backends on the
+    solo serve path."""
     def _do(f: BackendFn) -> BackendFn:
         if not name or not isinstance(name, str):
             raise ValueError("backend name must be a non-empty str, "
                              f"got {name!r}")
         _REGISTRY[name] = f
+        if batchable:
+            _BATCHABLE.add(name)
+        else:
+            _BATCHABLE.discard(name)
         return f
     return _do(fn) if fn is not None else _do
+
+
+def is_batchable(name: str) -> bool:
+    """True when ``name`` was registered as safe for batched dispatch."""
+    return name in _BATCHABLE
 
 
 def get_backend(name: str) -> BackendFn:
@@ -73,6 +94,12 @@ class BackendContext:
     devices: int = 1
     mesh: object = None                 # pre-built 1D 'pe' mesh or None
     trace: Optional[list] = None
+    # precomputed level-0 clustering labels (batched serving: one
+    # stacked jit program clusters several requests' level 0 at once).
+    # Must be exactly what core.coarsening.cluster would return for the
+    # driver's level-0 call — the hint is an execution strategy, never
+    # a result change.
+    level0_labels: Optional[np.ndarray] = None
 
 
 def resolve_backend(req, n_graph_vertices: int) -> str:
@@ -102,10 +129,11 @@ def required_devices(req, n_graph_vertices: int) -> int:
 # built-in backends
 # ---------------------------------------------------------------------------
 
-@register_backend("single")
+@register_backend("single", batchable=True)
 def _single(g: Graph, req, ctx: BackendContext) -> np.ndarray:
     return _single_partition(g, req.k, req.resolve_config(),
-                             trace=ctx.trace)
+                             trace=ctx.trace,
+                             level0_labels=ctx.level0_labels)
 
 
 def _dist(g: Graph, req, ctx: BackendContext,
@@ -126,12 +154,12 @@ def _dist_grid(g: Graph, req, ctx: BackendContext) -> np.ndarray:
     return _dist(g, req, ctx, use_grid=True)
 
 
-@register_backend("plain_mgp")
+@register_backend("plain_mgp", batchable=True)
 def _plain_mgp(g: Graph, req, ctx: BackendContext) -> np.ndarray:
     return baselines.plain_mgp(g, req.k, cfg=req.resolve_config())
 
 
-@register_backend("single_level_lp")
+@register_backend("single_level_lp", batchable=True)
 def _single_level_lp(g: Graph, req, ctx: BackendContext) -> np.ndarray:
     return baselines.single_level_lp(g, req.k, eps=req.epsilon,
                                      seed=req.seed)

@@ -11,13 +11,63 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence
 
 from .backends import BackendContext, resolve_backend
 from .partitioner import Partitioner
 from .request import GraphSpec, PartitionRequest
 from .result import PartitionResult
+
+
+class BucketCache:
+    """Bounded LRU mapping for long-lived serving processes.
+
+    Dict-shaped (``get`` / ``[]`` / ``len`` / ``in``) so it drops into
+    every existing graph-cache call site, but capped: inserting beyond
+    ``maxsize`` evicts the least-recently-used entry, so a diverse
+    traffic mix can no longer grow the shared cache without bound (the
+    serve tier's slow leak). The batching layer reuses it for its
+    shape-bucket caches — any hashable key works. Not thread-safe on
+    its own; callers hold the cache lock, exactly as with the plain
+    dict it replaces."""
+
+    def __init__(self, maxsize: int = 64):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.evictions = 0
+        self._data: OrderedDict = OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            value = self._data[key]
+        except KeyError:
+            return default
+        self._data.move_to_end(key)
+        return value
+
+    def __getitem__(self, key):
+        value = self._data[key]
+        self._data.move_to_end(key)
+        return value
+
+    def __setitem__(self, key, value) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def keys(self):
+        return self._data.keys()
 
 
 class PartitionSession:
@@ -46,18 +96,29 @@ class PartitionSession:
         Optional externally owned ``GraphSpec -> Graph`` mapping. The
         serving tier shares one cache across all worker sessions so a
         spec is materialized once per *server*, not once per mesh.
+        When omitted, the session owns a :class:`BucketCache` bounded
+        at ``graph_cache_size`` entries.
     graph_cache_lock:
         Lock guarding ``graph_cache``. Callers sharing one cache across
         sessions must share one lock too — otherwise two sessions can
         miss concurrently and both pay the materialization. The lock is
         held *through* the materialize on purpose: duplicated generator
         work costs seconds, a serialized cache miss costs a wait.
+    graph_cache_size:
+        LRU bound of the session-owned cache (ignored when an external
+        ``graph_cache`` is supplied).
+    stack:
+        Stacked-leading-axis execution for ``submit_many`` batches:
+        ``"auto"`` (on for accelerator backends, off on CPU where the
+        per-row sort is compute-bound and vmap buys nothing),
+        ``"on"``, or ``"off"``. See ``repro.serve.batching``.
     """
 
     def __init__(self, devices: int = 1, backend: Optional[str] = None,
                  max_workers: int = 4, mesh=None,
                  graph_cache: Optional[Dict[GraphSpec, object]] = None,
-                 graph_cache_lock: Optional[threading.Lock] = None):
+                 graph_cache_lock: Optional[threading.Lock] = None,
+                 graph_cache_size: int = 64, stack: str = "auto"):
         if devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
         if mesh is not None and (mesh.axis_names != ("pe",)
@@ -66,7 +127,11 @@ class PartitionSession:
                 f"mesh must be a 1D 'pe' mesh of exactly {devices} "
                 f"device(s), got axes {mesh.axis_names} over "
                 f"{mesh.devices.size}")
+        if stack not in ("auto", "on", "off"):
+            raise ValueError(
+                f"stack must be 'auto', 'on' or 'off', got {stack!r}")
         self.devices = devices
+        self.stack = stack
         self._engine = Partitioner(backend=backend)
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="repro-api")
@@ -74,7 +139,8 @@ class PartitionSession:
         self._mesh = mesh
         self._shard_ctx = None
         self._graph_cache: Dict[GraphSpec, object] = \
-            graph_cache if graph_cache is not None else {}
+            graph_cache if graph_cache is not None \
+            else BucketCache(graph_cache_size)
         self._graph_cache_lock = graph_cache_lock if \
             graph_cache_lock is not None else threading.Lock()
         self._served = 0
@@ -121,7 +187,8 @@ class PartitionSession:
 
     # -- serving -----------------------------------------------------------
 
-    def _run_one(self, req: PartitionRequest) -> PartitionResult:
+    def _run_one(self, req: PartitionRequest,
+                 level0_labels=None) -> PartitionResult:
         req = self._resolve_graph(req)
         eff = req
         if self._engine.backend is not None and req.backend == "auto":
@@ -132,22 +199,67 @@ class PartitionSession:
         mesh = self.mesh if (name in ("dist", "dist-grid")
                              and req.devices == self.devices) else None
         res = self._engine.run(
-            req, _ctx=BackendContext(devices=req.devices, mesh=mesh))
+            req, _ctx=BackendContext(devices=req.devices, mesh=mesh,
+                                     level0_labels=level0_labels))
         with self._lock:
             self._served += 1
             self._total_time_s += res.time_s
         return res
 
+    def _run_many(self, requests: List[PartitionRequest]
+                  ) -> List[PartitionResult]:
+        # lazy import: repro.serve layers on repro.api, not the reverse
+        from ..serve.batching import run_coalesced
+        return run_coalesced(self, requests, stack=self.stack)
+
     def submit(self, req: PartitionRequest) -> "Future[PartitionResult]":
-        """Enqueue one request; returns a future."""
-        if self._closed:
-            raise RuntimeError("session is closed")
-        return self._pool.submit(self._run_one, req)
+        """Enqueue one request; returns a future.
+
+        The closed-check and the executor submit happen under one lock
+        span: a submit racing ``close()`` either lands before the close
+        (and runs/cancels with the pool) or observes ``_closed`` and
+        raises the documented session-closed error — never the
+        executor's own shutdown ``RuntimeError``."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("session is closed")
+            return self._pool.submit(self._run_one, req)
+
+    def submit_many(self, requests: Sequence[PartitionRequest]
+                    ) -> "Future[List[PartitionResult]]":
+        """Enqueue a same-shape-bucket batch as ONE unit of work: the
+        returned future resolves to results in request order. Identical
+        requests are coalesced into a single partition run (requests
+        are pure functions of their fields), and — with ``stack`` on —
+        distinct requests share one stacked level-0 clustering program.
+        Results are bit-identical to per-request ``submit``."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("session is closed")
+            return self._pool.submit(self._run_many, list(requests))
 
     def run_batch(self, requests: Iterable[PartitionRequest]
                   ) -> List[PartitionResult]:
-        """Serve a batch concurrently; results in request order."""
-        futures = [self.submit(r) for r in requests]
+        """Serve a batch concurrently; results in request order.
+
+        A mid-loop submit failure (e.g. the session closing under us)
+        does not leak the already-submitted futures: they are cancelled
+        where possible and awaited otherwise, so no orphaned work keeps
+        running after the caller saw the raise."""
+        futures: List[Future] = []
+        try:
+            for r in requests:
+                futures.append(self.submit(r))
+        except BaseException:
+            for f in futures:
+                f.cancel()
+            for f in futures:
+                if not f.cancelled():
+                    try:
+                        f.result()
+                    except Exception:
+                        pass  # the caller gets the submit failure
+            raise
         return [f.result() for f in futures]
 
     def stats(self) -> Dict[str, float]:
@@ -160,8 +272,14 @@ class PartitionSession:
 
     def close(self, wait: bool = True) -> None:
         """``wait=False`` abandons in-flight work — the serving tier
-        uses it for workers whose executor thread is known wedged."""
-        self._closed = True
+        uses it for workers whose executor thread is known wedged.
+
+        ``_closed`` flips under the same lock ``submit`` holds; the
+        pool shutdown happens *outside* it (running requests take the
+        lock for stats, so shutting down inside would deadlock
+        ``wait=True``)."""
+        with self._lock:
+            self._closed = True
         self._pool.shutdown(wait=wait)
 
     def __enter__(self) -> "PartitionSession":

@@ -65,6 +65,39 @@ def enforce_cluster_weights(labels: np.ndarray, vweights: np.ndarray,
     return out
 
 
+def cluster_prepare(g: Graph, num_chunks: int, seed: int):
+    """Host-side setup shared by the solo and stacked clustering paths:
+    seeded degree-bucket reorder, permuted graph, padded chunk slabs.
+    Returns ``(perm, g2, chunks)``. Kept per-request even when requests
+    are batched — the reorder draws from a per-request RNG, so any
+    batch-level change here would break solo bit-identity."""
+    n = g.n
+    rng = np.random.default_rng(seed)
+    order = degree_bucket_order(g, rng)
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    g2, _ = permute(g, perm)
+    chunks = lp.build_chunks(g2, num_chunks)
+    return perm, g2, chunks
+
+
+def cluster_seed(seed: int, iteration: int) -> np.uint32:
+    """The jit-side salt stream for LP-clustering iteration ``it``."""
+    return np.uint32((seed * 1000003 + iteration) % (2**32))
+
+
+def cluster_finish(labels_pad: np.ndarray, g2: Graph, perm: np.ndarray,
+                   max_cluster_weight: int) -> np.ndarray:
+    """Shared epilogue: slice the padded label vector to the real
+    vertices, exactly enforce the cluster-weight bound, and map the
+    labels back to the input graph's vertex numbering."""
+    n = g2.n
+    lab2 = np.asarray(labels_pad)[:n].astype(np.int64)
+    lab2 = enforce_cluster_weights(lab2, np.asarray(g2.vweights),
+                                   int(max_cluster_weight))
+    return lab2[perm]
+
+
 def cluster(g: Graph,
             max_cluster_weight: int,
             num_iterations: int = 3,
@@ -75,12 +108,7 @@ def cluster(g: Graph,
     n = g.n
     if n <= 1:
         return np.zeros(n, dtype=np.int64)
-    rng = np.random.default_rng(seed)
-    order = degree_bucket_order(g, rng)
-    perm = np.empty(n, dtype=np.int64)
-    perm[order] = np.arange(n)
-    g2, _ = permute(g, perm)
-    chunks = lp.build_chunks(g2, num_chunks)
+    perm, g2, chunks = cluster_prepare(g, num_chunks, seed)
     np_pad = chunks.n_pad
     labels = jnp.arange(np_pad + 1, dtype=jnp.int32)
     vw = np.zeros(np_pad + 1, dtype=np.int32)
@@ -92,8 +120,5 @@ def cluster(g: Graph,
         labels, cluster_w = lp.cluster_iteration(
             labels, cluster_w, jnp.asarray(chunks.src),
             jnp.asarray(chunks.dst), jnp.asarray(chunks.w), vw, W,
-            jnp.uint32((seed * 1000003 + it) % (2**32)), n=np_pad)
-    lab2 = np.asarray(labels)[:n].astype(np.int64)
-    lab2 = enforce_cluster_weights(lab2, np.asarray(g2.vweights), int(W))
-    # back to original numbering
-    return lab2[perm]
+            jnp.uint32(cluster_seed(seed, it)), n=np_pad)
+    return cluster_finish(labels, g2, perm, int(W))

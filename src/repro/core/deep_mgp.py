@@ -188,12 +188,44 @@ def extend_partition(g: Graph, part: np.ndarray, block_k: np.ndarray,
     return part, block_k
 
 
+def level0_cluster_plan(g: Graph, k: int,
+                        cfg: Optional[PartitionerConfig] = None
+                        ) -> Optional[Dict]:
+    """Parameters of the level-0 ``cluster`` call :func:`partition`
+    would make for this input, or None when coarsening would not run
+    (small graph, ``k == 1``, ``max_levels == 0`` — a hint would go
+    unused). Pure function of the same inputs as the driver, so a
+    batching layer can precompute level-0 labels out-of-band and pass
+    them back via ``level0_labels`` with exact fidelity."""
+    cfg = (cfg or PartitionerConfig()).validate()
+    check_k(k, "deep_mgp.level0_cluster_plan")
+    if k == 1 or g.n == 0 or cfg.max_levels < 1:
+        return None
+    C, K = cfg.contraction_limit, cfg.initial_k
+    if not g.n > C * min(k, K):
+        return None
+    total_c = g.total_vweight
+    kprime = max(1, min(k, g.n // max(1, C)))
+    return {"W": max(1, int(cfg.epsilon * total_c / kprime)),
+            "num_iterations": cfg.cluster_iterations,
+            "num_chunks": cfg.num_chunks,
+            "seed": cfg.seed}
+
+
 def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
-              trace: Optional[List[Dict]] = None) -> np.ndarray:
+              trace: Optional[List[Dict]] = None,
+              level0_labels: Optional[np.ndarray] = None) -> np.ndarray:
     """Deep multilevel k-way partition. Returns block ids (n,).
 
     ``trace``, when given, receives one dict per phase/level (sizes, cuts,
     wall times) — the structured log surfaced by ``repro.api``.
+
+    ``level0_labels``, when given, replaces the level-0 ``cluster`` call
+    with precomputed labels. The caller guarantees they equal what that
+    call would return (use :func:`level0_cluster_plan` to reproduce its
+    parameters) — this is how the serving tier's batched dispatch runs
+    one stacked clustering program for many requests while keeping every
+    result bit-identical to a solo run.
     """
     cfg = (cfg or PartitionerConfig()).validate()
     check_k(k, "deep_mgp.partition")
@@ -213,8 +245,15 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
         kprime = max(1, min(k, G.n // max(1, C)))
         W = max(1, int(cfg.epsilon * total_c / kprime))
         t0 = time.perf_counter()
-        labels = cluster(G, W, num_iterations=cfg.cluster_iterations,
-                         num_chunks=cfg.num_chunks, seed=cfg.seed + level)
+        if level == 0 and level0_labels is not None:
+            labels = np.asarray(level0_labels)
+            if labels.shape[0] != G.n:
+                raise ValueError(
+                    f"level0_labels has {labels.shape[0]} entries for a "
+                    f"{G.n}-vertex graph")
+        else:
+            labels = cluster(G, W, num_iterations=cfg.cluster_iterations,
+                             num_chunks=cfg.num_chunks, seed=cfg.seed + level)
         Gc, mapping = contract(G, labels)
         log.info("level %d: n=%d -> n_c=%d (W=%d)", level, G.n, Gc.n, W)
         if Gc.n >= G.n * cfg.min_shrink:

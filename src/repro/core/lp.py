@@ -214,10 +214,10 @@ def _cluster_chunk(labels, cluster_w, chunk_src, chunk_dst, chunk_w,
     return final_labels, final_cw
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def cluster_iteration(labels, cluster_w, chunks_src, chunks_dst, chunks_w,
-                      vweights, max_cluster_weight, seed, *, n):
-    """One full LP-clustering iteration over all chunks."""
+def _cluster_iteration_impl(labels, cluster_w, chunks_src, chunks_dst,
+                            chunks_w, vweights, max_cluster_weight, seed, n):
+    """One full LP-clustering iteration over all chunks (traceable body
+    shared by the solo jit and the stacked vmap entry points)."""
     B = chunks_src.shape[0]
 
     def body(carry, xs):
@@ -233,6 +233,34 @@ def cluster_iteration(labels, cluster_w, chunks_src, chunks_dst, chunks_w,
     (labels, cluster_w), _ = jax.lax.scan(
         body, (labels, cluster_w), (chunks_src, chunks_dst, chunks_w, salts))
     return labels, cluster_w
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def cluster_iteration(labels, cluster_w, chunks_src, chunks_dst, chunks_w,
+                      vweights, max_cluster_weight, seed, *, n):
+    """One full LP-clustering iteration over all chunks."""
+    return _cluster_iteration_impl(labels, cluster_w, chunks_src, chunks_dst,
+                                   chunks_w, vweights, max_cluster_weight,
+                                   seed, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def cluster_iteration_stacked(labels, cluster_w, chunks_src, chunks_dst,
+                              chunks_w, vweights, max_cluster_weight, seed,
+                              *, n):
+    """``cluster_iteration`` with a leading request axis: every operand
+    carries an extra dim R and requests run as one vmapped program.
+
+    Per-row results are bit-identical to the solo entry point at the
+    same padded shape: the body is integer-only, vmap of integer ops is
+    exactly semantics-preserving, and padded rows/columns are inert
+    (weight-0 singleton vertices with sentinel arcs never move and are
+    never adopted as targets — see ``repro.serve.batching``)."""
+    return jax.vmap(
+        lambda la, cw, cs, cd, cww, vw, mw, sd: _cluster_iteration_impl(
+            la, cw, cs, cd, cww, vw, mw, sd, n)
+    )(labels, cluster_w, chunks_src, chunks_dst, chunks_w, vweights,
+      max_cluster_weight, seed)
 
 
 # ---------------------------------------------------------------------------

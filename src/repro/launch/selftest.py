@@ -17,8 +17,12 @@ equivalence, the ``repro.api`` facade (driver equality, batched
 sessions), and the ``repro.serve`` multi-mesh tier (``--test serve``:
 a 2-mesh server drains concurrent mixed-size requests bit-identically
 to solo runs, a killed worker's request completes via retry on the
-other mesh, and deadline expiry surfaces a structured error).
-Prints one JSON line per test; exit code 0 iff all pass.
+other mesh, and deadline expiry surfaces a structured error), and the
+shape-bucketed batched dispatch (``--test batch``: a duplicate-heavy
+hot mix is served in batches bit-identically to solo runs with
+coalescing observed in the metrics, and the stacked level-0 clustering
+path — forced on even on CPU hosts — reproduces solo results bit for
+bit). Prints one JSON line per test; exit code 0 iff all pass.
 """
 import argparse
 import json
@@ -31,7 +35,7 @@ def main() -> int:
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
                              "contract", "partition", "refine", "balance",
-                             "smoke", "api", "serve"])
+                             "smoke", "api", "serve", "batch"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -444,6 +448,52 @@ def main() -> int:
         report("serve.deadline_error",
                (not r.ok) and r.error == "deadline_exceeded" and
                st["expired"] == 1, error=r.error)
+
+    if args.test in ("all", "batch"):
+        import time
+        from repro.api import (GraphSpec, PartitionRequest, Partitioner,
+                               PartitionSession)
+        from repro.serve import PartitionServer, run_coalesced
+
+        engine = Partitioner()
+        nn = max(400, args.n // 4)
+        distinct = [PartitionRequest(
+            graph=GraphSpec(args.family, nn, 8.0, seed=31 + i),
+            k=max(2, args.k // 2), config=cfg, backend="single")
+            for i in range(4)]
+        solo = [engine.run(r) for r in distinct]
+
+        # a duplicate-heavy hot mix piles up behind a held worker, then
+        # drains as batches: bit-identical results, coalescing observed
+        mix = [distinct[i % 4] for i in range(12)]
+        with PartitionServer(meshes=1, batch_max=8,
+                             batch_window_ms=50.0) as srv:
+            srv.workers[0].hold()
+            futs = [srv.submit(r) for r in mix]
+            t_end = time.monotonic() + 30
+            while time.monotonic() < t_end and \
+                    srv.workers[0].inflight == 0:
+                time.sleep(0.01)
+            srv.workers[0].release()
+            rs = [f.result(timeout=600) for f in futs]
+            st = srv.stats()
+        same = all(r.ok and np.array_equal(r.result.assignment,
+                                           solo[i % 4].assignment)
+                   for i, r in enumerate(rs))
+        report("batch.coalesced_bit_identical",
+               same and st["completed"] == len(mix) and
+               st["batches"] >= 1 and st["coalesced"] >= 1,
+               batches=st["batches"], coalesced=st["coalesced"],
+               batch_size_max=st["batch_size_max"])
+
+        # the stacked level-0 kernel path, forced on (the CPU auto-gate
+        # would skip it), reproduces solo results bit for bit
+        with PartitionSession(devices=1, stack="on") as sess:
+            out = run_coalesced(sess, distinct, stack="on")
+        report("batch.stacked_bit_identical",
+               all(np.array_equal(o.assignment, s.assignment) and
+                   o.cut == s.cut for o, s in zip(out, solo)),
+               cuts=[o.cut for o in out])
 
     return 0 if ok else 1
 

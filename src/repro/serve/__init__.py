@@ -29,6 +29,11 @@ _EXPORTS = {
     "ServeMetrics": ".metrics",
     "pick_worker": ".scheduler",
     "rank": ".scheduler",
+    "BucketKey": ".batching",
+    "bucket_of": ".batching",
+    "pad_graph": ".batching",
+    "remove_padding": ".batching",
+    "run_coalesced": ".batching",
 }
 
 __all__ = sorted(_EXPORTS)

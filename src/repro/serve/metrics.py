@@ -10,6 +10,7 @@ depth-vs-offered-load curve the serve benchmark tracks.
 
 from __future__ import annotations
 
+import math
 import threading
 from typing import Dict, List, Optional
 
@@ -19,12 +20,17 @@ _MAX_SAMPLES = 8192
 def percentile(sorted_xs: List[float], p: float) -> float:
     """Nearest-rank percentile of an already-sorted sample (0 when
     empty) — enough fidelity for serving dashboards, no numpy needed
-    on the hot path."""
+    on the hot path.
+
+    Nearest-rank is the value at 1-indexed rank ``ceil(p/100 * n)``.
+    The old ``int(round(p/100 * (n-1)))`` form used banker's rounding,
+    which on small samples (n < 100 — the CI bench regime) selects a
+    *lower* rank than the definition and under-reports tail latency."""
     if not sorted_xs:
         return 0.0
     n = len(sorted_xs)
-    idx = int(round(p / 100.0 * (n - 1)))
-    return sorted_xs[min(n - 1, max(0, idx))]
+    idx = max(0, math.ceil(p / 100.0 * n) - 1)
+    return sorted_xs[min(n - 1, idx)]
 
 
 class ServeMetrics:
@@ -38,6 +44,9 @@ class ServeMetrics:
         self.expired = 0  # failed specifically on the deadline
         self.rejected = 0  # refused at admission (queue full/closed)
         self.retried = 0  # attempts re-routed to another mesh
+        self.batches = 0  # multi-ticket attempts dispatched
+        self.coalesced = 0  # tickets served off another ticket's run
+        self.batch_size_max = 0
         self.per_worker_served = [0] * num_workers
         self._latencies: List[float] = []
         self._queue_waits: List[float] = []
@@ -61,6 +70,14 @@ class ServeMetrics:
     def on_reject(self) -> None:
         with self._lock:
             self.rejected += 1
+
+    def on_batch(self, size: int, distinct: int) -> None:
+        """One multi-ticket attempt: ``size`` tickets ran as one batch,
+        of which only ``distinct`` needed their own partition run."""
+        with self._lock:
+            self.batches += 1
+            self.coalesced += max(0, size - distinct)
+            self.batch_size_max = max(self.batch_size_max, size)
 
     def on_done(
         self,
@@ -105,6 +122,9 @@ class ServeMetrics:
                 "expired": self.expired,
                 "rejected": self.rejected,
                 "retried": self.retried,
+                "batches": self.batches,
+                "coalesced": self.coalesced,
+                "batch_size_max": self.batch_size_max,
                 "per_worker_served": list(self.per_worker_served),
             }
         mean_depth = sum(depth) / len(depth) if depth else 0.0

@@ -40,6 +40,7 @@ class Ticket:
     deadline: Optional[float] = None  # absolute monotonic deadline
     timeout_s: Optional[float] = None  # per-attempt run timeout
     need: int = 1  # PE count the resolved backend wants
+    bucket: Optional[tuple] = None  # shape bucket (batchable) or None
     attempts: int = 0  # failed attempts so far
     excluded: Set[int] = dataclasses.field(default_factory=set)
     worker: Optional[int] = None  # worker currently assigned
@@ -92,12 +93,25 @@ class AdmissionQueue:
             return True
 
     def pop(self, timeout: Optional[float] = None) -> Optional[Ticket]:
-        """Highest-priority ticket, or None on timeout / empty queue."""
+        """Highest-priority ticket, or None on timeout — or immediately
+        once the queue is closed *and* drained.
+
+        Waits in a deadline loop: a spurious wakeup, or a competing
+        consumer winning the notify, puts this caller back to sleep for
+        the time actually remaining instead of returning None with time
+        still on the clock (the lost-wakeup bug under two consumers)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
-            if not self._heap:
-                self._cond.wait(timeout)
-            if not self._heap:
-                return None
+            while not self._heap:
+                if self._closed:
+                    return None
+                if deadline is None:
+                    self._cond.wait()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._cond.wait(remaining)
             return heapq.heappop(self._heap)[2]
 
     def pop_matching(self, pred) -> Optional[Ticket]:
@@ -105,14 +119,80 @@ class AdmissionQueue:
         ``pred``, or None (without blocking). This is what lets the
         dispatcher skip a ticket whose eligible meshes are all busy and
         serve the next one — instead of head-of-line blocking the whole
-        queue behind it."""
+        queue behind it.
+
+        One linear scan over the heap array tracking the best match
+        (the heap is unordered beyond its invariant, so every entry is
+        visited once), then an O(log n) index removal — the dispatcher's
+        hot loop must not pay the old sort-the-whole-heap O(n log n)."""
         with self._cond:
-            for entry in sorted(self._heap):
-                if pred(entry[2]):
-                    self._heap.remove(entry)
-                    heapq.heapify(self._heap)
-                    return entry[2]
+            return self._pop_matching_locked(pred)
+
+    def pop_batch(
+        self, pred, limit: int, window_s: float = 0.0
+    ) -> List[Ticket]:
+        """Remove up to ``limit`` tickets satisfying ``pred``, best
+        (priority, seq) first. When fewer than ``limit`` are queued,
+        linger up to ``window_s`` for more matching admissions — the
+        dispatcher's batch-collection window. Returns immediately with
+        whatever matched once the queue is closed."""
+        out: List[Ticket] = []
+        if limit <= 0:
+            return out
+        deadline = time.monotonic() + max(0.0, window_s)
+        with self._cond:
+            while len(out) < limit:
+                t = self._pop_matching_locked(pred)
+                if t is not None:
+                    out.append(t)
+                    continue
+                if self._closed:
+                    break
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+        return out
+
+    def _pop_matching_locked(self, pred) -> Optional[Ticket]:
+        heap = self._heap
+        best = -1
+        for i, (prio, seq, t) in enumerate(heap):
+            if best >= 0 and (prio, seq) >= heap[best][:2]:
+                continue
+            if pred(t):
+                best = i
+        if best < 0:
             return None
+        return self._remove_at(best)
+
+    def _remove_at(self, i: int) -> Ticket:
+        """Remove the entry at heap index ``i``: swap in the last entry
+        and restore the invariant around the hole (float up, else sink
+        below the smaller child). (priority, seq) keys are unique, so
+        entry comparisons never reach the unorderable ticket payload."""
+        heap = self._heap
+        entry = heap[i]
+        last = heap.pop()
+        if i < len(heap):
+            heap[i] = last
+            while i > 0 and heap[i] < heap[(i - 1) >> 1]:
+                parent = (i - 1) >> 1
+                heap[i], heap[parent] = heap[parent], heap[i]
+                i = parent
+            n = len(heap)
+            while True:
+                child = 2 * i + 1
+                if child >= n:
+                    break
+                if child + 1 < n and heap[child + 1] < heap[child]:
+                    child += 1
+                if heap[child] < heap[i]:
+                    heap[i], heap[child] = heap[child], heap[i]
+                    i = child
+                else:
+                    break
+        return entry[2]
 
     def drain(self) -> List[Ticket]:
         """Remove and return every queued ticket (close-time cleanup)."""

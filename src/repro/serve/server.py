@@ -27,7 +27,7 @@ from queue import SimpleQueue
 from typing import Any, Dict, Iterable, List, Optional
 
 from ..api.backends import required_devices
-from ..api.session import PartitionSession
+from ..api.session import BucketCache, PartitionSession
 from .metrics import ServeMetrics
 from .queue import AdmissionQueue, Ticket
 from .scheduler import pick_worker
@@ -109,6 +109,7 @@ class _Worker:
             mesh=mesh,
             graph_cache=server._graph_cache,
             graph_cache_lock=server._graph_cache_lock,
+            stack=server._stack,
         )
         self.inbox: SimpleQueue = SimpleQueue()
         self._gate = threading.Event()
@@ -136,15 +137,18 @@ class _Worker:
 
     def _loop(self) -> None:
         while True:
-            item = self.inbox.get()
+            item = self.inbox.get()  # a List[Ticket] batch, or _STOP
             if item is _STOP:
                 break
             try:
-                self._serve_one(item)
+                if len(item) == 1:
+                    self._serve_solo(item[0])
+                else:
+                    self._serve_batch(item)
             finally:
                 self._server._attempt_finished(self)
 
-    def _serve_one(self, ticket: Ticket) -> None:
+    def _serve_solo(self, ticket: Ticket) -> None:
         srv = self._server
         self._gate.wait()
         if srv._closing.is_set():
@@ -174,7 +178,7 @@ class _Worker:
             # slow for this job, not wedged, and must stay in rotation
             timeout = rem
             deadline_bound = True
-        if not self._drain_abandoned(ticket, timeout):
+        if not self._drain_abandoned([ticket], timeout):
             return
         fut = self.session.submit(ticket.request)
         try:
@@ -205,25 +209,129 @@ class _Worker:
             return
         srv._resolve_ok(ticket, res, self.wid)
 
-    def _drain_abandoned(self, ticket: Ticket, budget) -> bool:
+    def _serve_batch(self, tickets: List[Ticket]) -> None:
+        """One batched attempt: every ticket shares one submit_many
+        future (coalescing + optional stacked level-0 happen inside the
+        session), each resolving to its own bit-identical result."""
+        srv = self._server
+        self._gate.wait()
+        if srv._closing.is_set():
+            for t in tickets:
+                srv._resolve_error(
+                    t, ERR_CLOSED, "server closed before the attempt"
+                )
+            return
+        if not self.alive:
+            for t in tickets:
+                srv._attempt_failed(
+                    t, self.wid, "worker killed before the attempt"
+                )
+            return
+        now = time.monotonic()
+        live = []
+        for t in tickets:
+            if t.expired(now):
+                srv._resolve_error(
+                    t,
+                    ERR_DEADLINE,
+                    f"deadline passed before the attempt on worker "
+                    f"{self.wid}",
+                )
+            else:
+                live.append(t)
+        if not live:
+            return
+        if len(live) == 1:
+            # fall back to the solo path and its exact attempt semantics
+            return self._serve_solo(live[0])
+        # the batch attempt's bound is the loosest member budget (None
+        # when any member is unbounded). A timeout only counts as a
+        # wedged-worker signal when some member's own timeout_s was the
+        # binding constraint; all-deadline-bound overruns abandon the
+        # attempt and keep the worker in rotation, as in the solo path.
+        bounds: List[float] = []
+        unbounded = False
+        deadline_bound = True
+        for t in live:
+            rem = t.remaining(now)
+            to = t.timeout_s
+            if rem is not None and (to is None or rem < to):
+                bounds.append(rem)
+            elif to is not None:
+                bounds.append(to)
+                deadline_bound = False
+            else:
+                unbounded = True
+        timeout = None if unbounded else max(bounds)
+        if not self._drain_abandoned(live, timeout):
+            return
+        fut = self.session.submit_many([t.request for t in live])
+        try:
+            results = fut.result(timeout=timeout)
+        except _FutureTimeout:
+            if deadline_bound:
+                self._abandoned = fut
+                for t in live:
+                    srv._resolve_error(
+                        t,
+                        ERR_DEADLINE,
+                        f"deadline passed mid-attempt on worker {self.wid}",
+                    )
+                return
+            self.alive = False
+            for t in live:
+                srv._attempt_failed(
+                    t,
+                    self.wid,
+                    f"attempt timed out after {timeout:.3f}s"
+                    " (worker marked dead)",
+                )
+            return
+        except Exception as exc:  # any failure must become data
+            for t in live:
+                srv._attempt_failed(
+                    t, self.wid, f"{type(exc).__name__}: {exc}"
+                )
+            return
+        from .batching import distinct_count
+
+        srv._metrics.on_batch(
+            len(live), distinct_count([t.request for t in live])
+        )
+        now = time.monotonic()
+        for t, res in zip(live, results):
+            if t.expired(now):
+                # the batch outlived this member's deadline: the solo
+                # contract (a result only counts inside the deadline)
+                # wins over the computed-anyway result
+                srv._resolve_error(
+                    t,
+                    ERR_DEADLINE,
+                    f"deadline passed mid-attempt on worker {self.wid}",
+                )
+            else:
+                srv._resolve_ok(t, res, self.wid)
+
+    def _drain_abandoned(self, tickets: List[Ticket], budget) -> bool:
         """A deadline-abandoned attempt keeps the session's executor
         thread busy after its ticket resolved. Its runtime is *this
         worker's backlog*, not the next attempt's cost — so drain it
         before starting (and timing) a fresh attempt. If the drain
-        exceeds the new ticket's budget the mesh simply can't take the
+        exceeds the new tickets' budget the mesh simply can't take the
         job in time: fail over WITHOUT marking the worker dead (the
         executor is making progress on real work, not wedged). Returns
-        False when the ticket was already resolved/failed over."""
+        False when the tickets were already resolved/failed over."""
         if self._abandoned is None:
             return True
         try:
             self._abandoned.result(timeout=budget)
         except _FutureTimeout:
-            self._server._attempt_failed(
-                ticket,
-                self.wid,
-                "worker busy draining a deadline-abandoned attempt",
-            )
+            for t in tickets:
+                self._server._attempt_failed(
+                    t,
+                    self.wid,
+                    "worker busy draining a deadline-abandoned attempt",
+                )
             return False
         except Exception:
             pass  # the abandoned job failed; the executor is free
@@ -258,7 +366,22 @@ class PartitionServer:
         Attempts a worker may own at once (assigned + running). The
         default of 1 keeps requests in the priority queue — where
         scheduling decisions are still possible — rather than in
-        per-worker inboxes.
+        per-worker inboxes. A batch counts as one attempt.
+    batch_max:
+        Most tickets one dispatch may serve as a single batched attempt
+        (same shape bucket, see ``serve.batching``); 1 disables
+        batching entirely.
+    batch_window_ms:
+        How long the dispatcher lingers for same-bucket stragglers once
+        a batch leader popped and fewer than ``batch_max`` companions
+        are queued. Small on purpose: the window trades that much p50
+        latency for batch fill under bursty admission.
+    graph_cache_size:
+        LRU bound of the server-shared ``GraphSpec -> Graph`` cache
+        (bounded so diverse long-lived traffic cannot leak memory).
+    stack:
+        Stacked level-0 execution knob threaded to every worker session
+        (``"auto"`` | ``"on"`` | ``"off"``, see ``serve.batching``).
     """
 
     def __init__(
@@ -269,6 +392,10 @@ class PartitionServer:
         max_queue: int = 1024,
         max_retries: int = 1,
         max_inflight_per_worker: int = 1,
+        batch_max: int = 8,
+        batch_window_ms: float = 2.0,
+        graph_cache_size: int = 64,
+        stack: str = "auto",
     ):
         if meshes < 1:
             raise ValueError(f"meshes must be >= 1, got {meshes}")
@@ -283,11 +410,20 @@ class PartitionServer:
                 "max_inflight_per_worker must be >= 1, got "
                 f"{max_inflight_per_worker}"
             )
+        if batch_max < 1:
+            raise ValueError(f"batch_max must be >= 1, got {batch_max}")
+        if batch_window_ms < 0:
+            raise ValueError(
+                f"batch_window_ms must be >= 0, got {batch_window_ms}"
+            )
         self.devices_per_mesh = devices_per_mesh
         self._backend = backend
         self._max_retries = max_retries
         self._max_inflight = max_inflight_per_worker
-        self._graph_cache: dict = {}
+        self._batch_max = batch_max
+        self._batch_window_s = batch_window_ms / 1000.0
+        self._stack = stack
+        self._graph_cache = BucketCache(graph_cache_size)
         self._graph_cache_lock = threading.Lock()
         if devices_per_mesh > 1:
             # disjoint contiguous device slices, one 1D 'pe' mesh each
@@ -344,6 +480,11 @@ class PartitionServer:
         if self._backend is not None and request.backend == "auto":
             eff = dataclasses.replace(request, backend=self._backend)
         need = required_devices(eff, request.graph.n)
+        bucket = None
+        if self._batch_max > 1 and need == 1:
+            from .batching import bucket_of
+
+            bucket = bucket_of(eff)
         now = time.monotonic()
         fut: "Future[ServeResult]" = Future()
         with self._seq_lock:
@@ -358,6 +499,7 @@ class PartitionServer:
             deadline=None if deadline_s is None else now + deadline_s,
             timeout_s=timeout_s,
             need=need,
+            bucket=bucket,
         )
         if not self._queue.put(ticket):
             if self._closing.is_set():
@@ -437,13 +579,36 @@ class PartitionServer:
         self._metrics.on_dispatch(self._queue.depth())
         if ticket.dispatch_t is None:
             ticket.dispatch_t = time.monotonic()
-        self._assign_now(ticket)
+        batch = [ticket]
+        if ticket.bucket is not None and self._batch_max > 1:
+            batch += self._collect_batch(ticket)
+        self._assign_now(batch)
         return True
 
-    def _assign_now(self, ticket: Ticket) -> None:
-        """Hand the ticket to the best free eligible worker; if the
+    def _collect_batch(self, leader: Ticket) -> List[Ticket]:
+        """Same-bucket companions for a popped batch leader, lingering
+        ``batch_window_ms`` for stragglers. Companions must be
+        first-attempt tickets (a retry carries an exclusion set and its
+        own attempt accounting — it keeps the solo path)."""
+        companions = self._queue.pop_batch(
+            lambda t: t.bucket == leader.bucket and not t.excluded,
+            limit=self._batch_max - 1,
+            window_s=self._batch_window_s,
+        )
+        if companions:
+            now = time.monotonic()
+            for t in companions:
+                if t.dispatch_t is None:
+                    t.dispatch_t = now
+            self._metrics.on_dispatch(self._queue.depth())
+        return companions
+
+    def _assign_now(self, batch: List[Ticket]) -> None:
+        """Hand the batch to the best free eligible worker; if the
         free set changed under us (a concurrent kill), requeue — the
-        next pass re-routes it."""
+        next pass re-routes it. Eligibility is the leader's: companions
+        are first-attempt tickets with no exclusions."""
+        ticket = batch[0]
         with self._cap_cond:
             cands = [
                 w
@@ -455,13 +620,15 @@ class PartitionServer:
             if chosen is not None:
                 chosen.inflight += 1
         if chosen is None:
-            if not self._queue.requeue(ticket):
-                self._resolve_error(
-                    ticket, ERR_CLOSED, "server closed during dispatch"
-                )
+            for t in batch:
+                if not self._queue.requeue(t):
+                    self._resolve_error(
+                        t, ERR_CLOSED, "server closed during dispatch"
+                    )
             return
-        ticket.worker = chosen.wid
-        chosen.inbox.put(ticket)
+        for t in batch:
+            t.worker = chosen.wid
+        chosen.inbox.put(batch)
 
     # -- worker callbacks ----------------------------------------------
 

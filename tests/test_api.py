@@ -234,6 +234,69 @@ def test_session_rejects_after_close():
         sess.submit(PartitionRequest(graph=GraphSpec("rgg2d", 100), k=2))
 
 
+def test_session_submit_close_race_raises_session_closed():
+    """Hammer submit against close: every losing submit must raise the
+    documented session-closed RuntimeError — never the raw executor
+    shutdown error (the old race: closed-check outside the lock)."""
+    import threading
+
+    req = PartitionRequest(graph=GraphSpec("rgg2d", 120), k=2,
+                           config=CFG, backend="single")
+    for _ in range(10):
+        sess = PartitionSession(devices=1, max_workers=2)
+        errors, futs = [], []
+        stop = threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                try:
+                    futs.append(sess.submit(req))
+                except RuntimeError as e:
+                    errors.append(str(e))
+                    return
+
+        t = threading.Thread(target=hammer)
+        t.start()
+        sess.close(wait=False)
+        stop.set()
+        t.join(timeout=30)
+        assert all(e == "session is closed" for e in errors), errors
+        for f in futs:
+            if not f.cancelled():
+                try:
+                    f.result(timeout=60)
+                except Exception:
+                    pass
+
+
+def test_run_batch_mid_loop_failure_cleans_up_futures():
+    """A submit raise mid-batch must not leak already-submitted work:
+    run_batch cancels/awaits the captured futures before re-raising."""
+    sess = PartitionSession(devices=1, max_workers=2)
+    captured = []
+    orig_submit = sess.submit
+
+    def flaky_submit(req):
+        if captured:
+            raise RuntimeError("injected submit failure")
+        fut = orig_submit(req)
+        captured.append(fut)
+        return fut
+
+    sess.submit = flaky_submit
+    reqs = [PartitionRequest(graph=GraphSpec("rgg2d", 150, seed=i), k=2,
+                             config=CFG, backend="single")
+            for i in range(3)]
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            sess.run_batch(reqs)
+        assert len(captured) == 1
+        # the survivor was awaited (or cancelled) before the re-raise
+        assert captured[0].done() or captured[0].cancelled()
+    finally:
+        sess.close()
+
+
 # ---------------------------------------------------------------------------
 # runtime helper
 # ---------------------------------------------------------------------------

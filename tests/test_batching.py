@@ -1,0 +1,185 @@
+"""repro.serve.batching: shape buckets, padding inertness, the bounded
+LRU graph cache, coalescing, and stacked level-0 bit-identity.
+
+The stacked tests force ``stack="on"`` — the CPU auto-gate would skip
+the vmapped path — so the kernel-level bit-identity claim is exercised
+regardless of the host backend.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (BucketCache, GraphSpec, PartitionRequest,
+                       Partitioner, PartitionSession, is_batchable)
+from repro.core import PartitionerConfig
+from repro.core import metrics
+from repro.serve.batching import (BucketKey, bucket_of, distinct_count,
+                                  pad_dim, pad_graph, remove_padding,
+                                  request_fingerprint, run_coalesced,
+                                  stacked_level0_labels)
+
+CFG = PartitionerConfig(contraction_limit=128, ip_repetitions=2,
+                        num_chunks=4)
+
+
+def req(n=700, k=4, seed=5, **kw):
+    return PartitionRequest(graph=GraphSpec("rgg2d", n, 8.0, seed=seed),
+                            k=k, config=CFG, backend="single", **kw)
+
+
+# ---------------------------------------------------------------------------
+# padding ladder + buckets (pure)
+# ---------------------------------------------------------------------------
+
+def test_pad_dim_geometric_ladder():
+    assert pad_dim(1) == 1
+    assert pad_dim(2) == 2
+    assert pad_dim(3) == 4
+    assert pad_dim(1024) == 1024
+    assert pad_dim(1025) == 2048
+    assert pad_dim(0, floor=256) == 256
+    assert pad_dim(300, floor=256) == 512
+
+
+def test_bucket_of_groups_same_rung():
+    # different seeds, same shape rung -> same bucket
+    assert bucket_of(req(seed=1)) == bucket_of(req(seed=2))
+    assert bucket_of(req()) == BucketKey(1024, 8192, 4, "single")
+    # k is part of the key
+    assert bucket_of(req(k=2)) != bucket_of(req(k=4))
+    # a different rung is a different bucket
+    assert bucket_of(req(n=700)) != bucket_of(req(n=1100))
+
+
+def test_bucket_of_none_for_solo_only_paths():
+    # multi-device asks stay solo
+    assert bucket_of(req(devices=2)) is None
+    # dist backends are not batchable
+    big = PartitionRequest(graph=GraphSpec("rgg2d", 50000), k=4,
+                           devices=4)
+    assert bucket_of(big) is None
+    assert not is_batchable("dist")
+    assert is_batchable("single")
+
+
+def test_request_fingerprint_identity():
+    assert request_fingerprint(req()) == request_fingerprint(req())
+    assert request_fingerprint(req(seed=1)) != request_fingerprint(
+        req(seed=2))
+    # raw Graph payloads key by object identity
+    g = GraphSpec("rgg2d", 300, 8.0, seed=3).materialize()
+    a = PartitionRequest(graph=g, k=2, config=CFG, backend="single")
+    b = PartitionRequest(graph=g, k=2, config=CFG, backend="single")
+    assert request_fingerprint(a) == request_fingerprint(b)
+    g2 = GraphSpec("rgg2d", 300, 8.0, seed=3).materialize()
+    c = PartitionRequest(graph=g2, k=2, config=CFG, backend="single")
+    assert request_fingerprint(a) != request_fingerprint(c)
+    assert distinct_count([req(), req(), req(seed=9)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# graph-level padding is inert
+# ---------------------------------------------------------------------------
+
+def test_pad_graph_preserves_cut_and_block_weights():
+    g = GraphSpec("rgg2d", 500, 8.0, seed=11).materialize()
+    res = Partitioner().run(PartitionRequest(graph=g, k=4, config=CFG,
+                                             backend="single"))
+    gp = pad_graph(g, 512)
+    assert gp.n == 512 and gp.m == g.m
+    assert gp.vweights[g.n:].sum() == 0
+    # any labels on the padded vertices leave the metrics unchanged
+    ext = np.concatenate([res.assignment,
+                          np.arange(512 - g.n, dtype=np.int64) % 4])
+    assert metrics.edge_cut(gp, ext) == res.cut
+    assert np.array_equal(metrics.block_weights(gp, ext, 4),
+                          metrics.block_weights(g, res.assignment, 4))
+    assert np.array_equal(remove_padding(ext, g.n), res.assignment)
+
+
+def test_pad_graph_validates_and_noops():
+    g = GraphSpec("rgg2d", 500, 8.0, seed=11).materialize()
+    assert pad_graph(g, 500) is g
+    with pytest.raises(ValueError):
+        pad_graph(g, 400)
+
+
+# ---------------------------------------------------------------------------
+# bounded LRU cache
+# ---------------------------------------------------------------------------
+
+def test_bucket_cache_lru_eviction_and_recency():
+    c = BucketCache(maxsize=2)
+    c["a"], c["b"] = 1, 2
+    assert c["a"] == 1          # touch "a" -> "b" is now LRU
+    c["c"] = 3
+    assert "b" not in c and "a" in c and "c" in c
+    assert len(c) == 2 and c.evictions == 1
+    assert c.get("missing", 42) == 42
+    with pytest.raises(ValueError):
+        BucketCache(maxsize=0)
+
+
+def test_session_cache_bound_rematerializes_correctly():
+    specs = [GraphSpec("rgg2d", 300 + 100 * i, 8.0, seed=i)
+             for i in range(3)]
+    reqs = [PartitionRequest(graph=s, k=2, config=CFG, backend="single")
+            for s in specs]
+    solo = Partitioner().run_batch(reqs)
+    with PartitionSession(devices=1, graph_cache_size=1) as sess:
+        # serve forward then backward: every spec is evicted and
+        # re-materialized at least once, results never change
+        out = sess.run_batch(reqs) + sess.run_batch(reqs[::-1])
+        assert len(sess._graph_cache) == 1
+        assert sess._graph_cache.evictions >= 3
+    for r, s in zip(out, solo + solo[::-1]):
+        assert np.array_equal(r.assignment, s.assignment)
+
+
+# ---------------------------------------------------------------------------
+# coalescing + stacked level-0: bit-identity
+# ---------------------------------------------------------------------------
+
+def test_coalescing_shares_one_run_bit_identical():
+    reqs = [req(), req(seed=9), req(), req()]
+    solo = Partitioner().run_batch(reqs)
+    with PartitionSession(devices=1, stack="off") as sess:
+        out = sess.submit_many(reqs).result()
+        served = sess.stats()["served"]
+    assert out[0] is out[2] and out[0] is out[3]   # one shared run
+    assert out[0] is not out[1]
+    assert served == 2                             # 4 requests, 2 runs
+    for r, s in zip(out, solo):
+        assert np.array_equal(r.assignment, s.assignment)
+        assert r.cut == s.cut
+
+
+def test_stacked_level0_labels_match_solo_cluster():
+    from repro.core.coarsening import cluster
+    from repro.core.deep_mgp import level0_cluster_plan
+
+    graphs = [GraphSpec("rgg2d", 500 + 170 * i, 8.0, seed=3 + i
+                        ).materialize() for i in range(3)]
+    plans = [level0_cluster_plan(g, 4, CFG) for g in graphs]
+    assert all(p is not None for p in plans)
+    labs = stacked_level0_labels(graphs, plans)
+    for g, p, lab in zip(graphs, plans, labs):
+        ref = cluster(g, p["W"], num_iterations=p["num_iterations"],
+                      num_chunks=p["num_chunks"], seed=p["seed"])
+        assert np.array_equal(lab, ref)
+
+
+def test_stacked_end_to_end_bit_identical_to_solo():
+    reqs = [req(n=500, k=2, seed=1), req(n=700, k=4, seed=2),
+            req(n=900, k=4, seed=3)]
+    solo = Partitioner().run_batch(reqs)
+    with PartitionSession(devices=1, stack="on") as sess:
+        out = run_coalesced(sess, reqs, stack="on")
+    for r, s in zip(out, solo):
+        assert np.array_equal(r.assignment, s.assignment)
+        assert r.cut == s.cut
+        assert r.feasible
+
+
+def test_session_rejects_bad_stack_knob():
+    with pytest.raises(ValueError):
+        PartitionSession(stack="maybe")

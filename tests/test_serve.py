@@ -120,6 +120,132 @@ def test_queue_capacity_and_close():
     assert q.depth() == 0
 
 
+def test_queue_pop_survives_spurious_wakeup():
+    """A notify with nothing to pop (spurious wakeup / a competing
+    consumer winning the race) must put the waiter back to sleep for
+    the remaining time — not return None with time still on the
+    clock (the lost-wakeup bug)."""
+    q = AdmissionQueue(capacity=8)
+    got = []
+    t = threading.Thread(target=lambda: got.append(q.pop(timeout=5.0)))
+    t.start()
+    time.sleep(0.05)                    # waiter is parked in wait()
+    with q._cond:
+        q._cond.notify_all()            # wake with an empty heap
+    time.sleep(0.05)
+    assert not got, "waiter returned early on a spurious wakeup"
+    ticket = make_ticket(0, 0)
+    assert q.put(ticket)
+    t.join(timeout=5)
+    assert got == [ticket]
+
+
+def test_queue_two_consumers_no_starvation():
+    """Two consumers, items trickling in: every item is delivered and
+    neither popper gives up early because the other stole its notify."""
+    q = AdmissionQueue(capacity=64)
+    got, lock = [], threading.Lock()
+
+    def consume():
+        while True:
+            t = q.pop(timeout=10.0)
+            if t is None:
+                return
+            with lock:
+                got.append(t.seq)
+
+    threads = [threading.Thread(target=consume) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for seq in range(20):
+        q.put(make_ticket(0, seq))
+        time.sleep(0.002)
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline:
+        with lock:
+            if len(got) == 20:
+                break
+        time.sleep(0.01)
+    q.close()
+    for t in threads:
+        t.join(timeout=10)
+    assert sorted(got) == list(range(20))
+
+
+def test_queue_pop_closed_and_drained_returns_none():
+    q = AdmissionQueue(capacity=8)
+    ticket = make_ticket(0, 0)
+    q.put(ticket)
+    q.close()
+    # closed but not drained: queued work still comes out
+    assert q.pop(timeout=5.0) is ticket
+    # closed and drained: immediate None, even with a long timeout
+    t0 = time.monotonic()
+    assert q.pop(timeout=30.0) is None
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_pop_matching_order_equivalent_to_reference():
+    """The single-scan ``pop_matching`` must drain in exactly the order
+    a sort-the-whole-heap reference implementation would."""
+    import random
+
+    def reference_order(tickets, pred):
+        rest = list(tickets)
+        out = []
+        while True:
+            cands = sorted((t.priority, t.seq) for t in rest if pred(t))
+            if not cands:
+                return out
+            prio, seq = cands[0]
+            pick = next(t for t in rest
+                        if (t.priority, t.seq) == (prio, seq))
+            rest.remove(pick)
+            out.append((prio, seq))
+
+    rng = random.Random(42)
+    for trial in range(20):
+        tickets = [make_ticket(rng.randrange(4), seq)
+                   for seq in range(rng.randrange(1, 40))]
+        pred = (lambda t: True) if trial % 2 else \
+            (lambda t: t.seq % 3 != 0)
+        q = AdmissionQueue(capacity=64)
+        order = list(range(len(tickets)))
+        rng.shuffle(order)
+        for i in order:
+            q.put(tickets[i])
+        got = []
+        while True:
+            t = q.pop_matching(pred)
+            if t is None:
+                break
+            got.append((t.priority, t.seq))
+        assert got == reference_order(tickets, pred)
+        # non-matching tickets stay queued, heap invariant intact
+        leftovers = [(t.priority, t.seq) for t in iter(
+            lambda: q.pop_matching(lambda _: True), None)]
+        assert leftovers == reference_order(
+            [t for t in tickets if not pred(t)], lambda _: True)
+
+
+def test_queue_pop_batch_collects_up_to_limit():
+    q = AdmissionQueue(capacity=16)
+    for seq in range(5):
+        q.put(make_ticket(seq % 2, seq))
+    batch = q.pop_batch(lambda t: t.priority == 0, limit=2)
+    assert [(t.priority, t.seq) for t in batch] == [(0, 0), (0, 2)]
+    # window=0 with nothing matching left beyond limit: immediate
+    batch2 = q.pop_batch(lambda t: t.priority == 0, limit=5)
+    assert [(t.priority, t.seq) for t in batch2] == [(0, 4)]
+    assert q.depth() == 2               # priority-1 tickets untouched
+    # a lingering pop_batch picks up late matching admissions
+    late = make_ticket(0, 9)
+    threading.Timer(0.05, lambda: q.put(late)).start()
+    batch3 = q.pop_batch(lambda t: t.priority == 0, limit=1,
+                         window_s=5.0)
+    assert batch3 == [late]
+
+
 def test_ticket_deadline():
     now = time.monotonic()
     t = make_ticket(0, 0, deadline=now - 1)
@@ -138,10 +264,33 @@ def test_metrics_percentile_and_snapshot():
     m = ServeMetrics(2)
     m.on_submit(3)
     m.on_done(True, 0.5, 0.1, worker=1)
+    m.on_batch(4, 2)
     snap = m.snapshot()
     assert snap["submitted"] == 1 and snap["completed"] == 1
     assert snap["per_worker_served"] == [0, 1]
     assert snap["queue_depth_max"] == 3
+    assert snap["batches"] == 1 and snap["coalesced"] == 2
+    assert snap["batch_size_max"] == 4
+
+
+def test_percentile_nearest_rank_exact():
+    """Nearest-rank definition: value at 1-indexed rank ceil(p/100*n).
+    The old banker's-rounding implementation read one element low for
+    e.g. p50 of n=2 and p99 of n=100."""
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([1.0, 2.0], 50) == 1.0
+    assert percentile([1.0, 2.0], 75) == 2.0
+    assert percentile([1.0, 2.0, 3.0], 50) == 2.0
+    assert percentile([1.0, 2.0, 3.0], 100) == 3.0
+    xs100 = [float(i) for i in range(1, 101)]
+    assert percentile(xs100, 50) == 50.0
+    assert percentile(xs100, 99) == 99.0
+    assert percentile(xs100, 100) == 100.0
+    xs101 = [float(i) for i in range(1, 102)]
+    assert percentile(xs101, 50) == 51.0
+    assert percentile(xs101, 99) == 100.0
+    assert percentile(xs101, 0) == 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +320,56 @@ def test_graph_cache_shared_across_workers():
         results = srv.serve(reqs)
         assert len(srv._graph_cache) == 1   # one spec -> one materialize
     assert all(r.ok for r in results)
+
+
+def test_batched_dispatch_bit_identical_and_coalesces():
+    """A duplicate-heavy hot mix must batch (same shape bucket), share
+    runs for identical requests, and still return results bit-identical
+    to solo ``Partitioner.run`` per request."""
+    distinct = [PartitionRequest(
+        graph=GraphSpec("rgg2d", 600, 8.0, seed=s), k=4, config=CFG,
+        backend="single") for s in (1, 2, 3)]
+    reqs = [distinct[i % 3] for i in range(12)]
+    solo = Partitioner().run_batch(distinct)
+    with PartitionServer(meshes=1, batch_max=8,
+                         batch_window_ms=50.0) as srv:
+        # hold the worker so the burst piles up in one bucket, then
+        # release: the dispatcher collects them as batches
+        srv.workers[0].hold()
+        futs = [srv.submit(r) for r in reqs]
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline and \
+                srv.workers[0].inflight == 0:
+            time.sleep(0.01)
+        srv.workers[0].release()
+        results = [f.result(timeout=300) for f in futs]
+        stats = srv.stats()
+    for i, r in enumerate(results):
+        assert r.ok, r.error
+        s = solo[i % 3]
+        assert np.array_equal(r.result.assignment, s.assignment)
+        assert r.result.cut == s.cut
+    assert stats["completed"] == len(reqs)
+    assert stats["batches"] >= 1, "burst never dispatched as a batch"
+    assert stats["coalesced"] >= 1
+    assert stats["batch_size_max"] >= 2
+
+
+def test_batching_disabled_keeps_solo_dispatch():
+    reqs = mixed_requests(4, base_n=400)
+    with PartitionServer(meshes=1, batch_max=1) as srv:
+        results = srv.serve(reqs)
+        stats = srv.stats()
+    assert all(r.ok for r in results)
+    assert stats["batches"] == 0
+
+
+@pytest.mark.parametrize("kw", [
+    dict(batch_max=0), dict(batch_window_ms=-1.0),
+])
+def test_server_rejects_bad_batch_knobs(kw):
+    with pytest.raises(ValueError):
+        PartitionServer(**kw)
 
 
 # ---------------------------------------------------------------------------
