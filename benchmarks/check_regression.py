@@ -8,8 +8,10 @@ instead of only uploading artifacts — when:
 
   * any fresh record is infeasible (``"feasible": false`` anywhere),
     reports failed serve requests, reports batched serve results that
-    deviate bit-wise from solo runs (``"bit_identical": false``), or
-    reports a ``batch_speedup`` below the 2x floor;
+    deviate bit-wise from solo runs (``"bit_identical": false``),
+    reports a ``batch_speedup`` below the 2x floor, or reports a fabric
+    autoscaler that failed to grow under pressure or shrink back when
+    idle (``"grew"``/``"shrank"`` false);
   * a ``cut`` regresses by more than ``--tolerance`` (cuts are
     deterministic for fixed seeds, so any growth is a code change);
   * a latency/time metric regresses by more than ``--time-tolerance``
@@ -131,6 +133,12 @@ def check_invariants(node, path: str, failures: List[str]) -> None:
                 failures.append(
                     f"{sub}: batched dispatch only {val}x solo "
                     f"(< {MIN_BATCH_SPEEDUP}x floor)")
+            elif key == "grew" and val is False:
+                failures.append(f"{sub}: autoscaler never grew the "
+                                "fleet under queue pressure")
+            elif key == "shrank" and val is False:
+                failures.append(f"{sub}: autoscaler never shrank the "
+                                "idle fleet back down")
             else:
                 check_invariants(val, sub, failures)
     elif isinstance(node, list):

@@ -13,6 +13,14 @@ A ``batched`` section drives a duplicate-heavy hot mix through the
 shape-bucketed batched dispatcher and the same requests solo back to
 back: the gate fails if the batched throughput falls below 2x solo or
 if any batched result deviates bit-wise from its solo run.
+
+A ``fabric`` section exercises the cross-process tier
+(``repro.fabric``): the same burst through a front door backed by 1
+then 2 real worker *processes* (throughput/p99 per fleet size, every
+request must resolve ok and both servers must serve), then an
+autoscaled front door under queue pressure — the gate fails unless the
+fleet demonstrably grows 1 -> 2 under load (``grew``) and shrinks back
+when idle (``shrank``).
 """
 from __future__ import annotations
 
@@ -132,18 +140,151 @@ out["batched"] = {
 print(json.dumps(out))
 """
 
+# The fabric child owns only the front door and the client — workers
+# are grandchild processes spawned through the CLI, each with its own
+# jax runtime. The front door never initializes a backend, so this
+# child stays light; all partition compute happens in the workers.
+_FABRIC_CHILD = r"""
+import json, signal, subprocess, sys, time
+R = int(sys.argv[1]); n = int(sys.argv[2]); k = int(sys.argv[3])
+from repro.api import GraphSpec, PartitionRequest
+from repro.core import PartitionerConfig
+from repro.fabric import AutoscaleConfig, FabricClient, FrontDoor
+
+cfg = PartitionerConfig(contraction_limit=128, ip_repetitions=1,
+                        num_chunks=4)
+reqs = [PartitionRequest(
+            graph=GraphSpec("rgg2d", n, 8.0, seed=71 + i % 4),
+            k=k, config=cfg, backend="single", collect_trace=False)
+        for i in range(R)]
+
+
+def spawn_worker(fd, sid):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.fabric", "worker",
+         "--frontdoor", f"{fd.host}:{fd.port}", "--server-id", sid,
+         "--heartbeat-s", "0.3"],
+        stdout=subprocess.PIPE, text=True)
+    json.loads(proc.stdout.readline())  # block on the ready line
+    return proc
+
+
+def wait_servers(fd, count, timeout=180.0):
+    t_end = time.monotonic() + timeout
+    while time.monotonic() < t_end:
+        if len(fd.registry.alive()) >= count:
+            return True
+        time.sleep(0.05)
+    return False
+
+
+def measure(client, reqs):
+    lat = {}
+    t0 = time.perf_counter()
+    futs = []
+    for i, r in enumerate(reqs):
+        ts = time.perf_counter()
+        f = client.submit(r)
+        f.add_done_callback(
+            lambda f, i=i, ts=ts:
+            lat.__setitem__(i, time.perf_counter() - ts))
+        futs.append(f)
+    results = [f.result() for f in futs]
+    wall = time.perf_counter() - t0
+    xs = sorted(lat.values())
+    nn = len(xs)
+    return results, {
+        "wall_s": round(wall, 4),
+        "throughput_rps": round(len(results) / wall, 4),
+        "latency_p50_s": round(xs[(nn - 1) // 2], 4),
+        "latency_p99_s": round(xs[min(nn - 1, (99 * nn + 99) // 100 - 1)],
+                               4),
+    }
+
+
+out = {"requests": R, "n": n, "k": k, "workers": {}}
+
+# -- throughput/p99 at 1 vs 2 worker processes ------------------------------
+procs = []
+with FrontDoor(port=0, lease_ttl_s=5.0) as fd:
+    with FabricClient(fd.host, fd.port) as client:
+        for fleet in (1, 2):
+            procs.append(spawn_worker(fd, f"bench-w{fleet - 1}"))
+            assert wait_servers(fd, fleet), "worker never registered"
+            client.serve(reqs)  # warm every worker's jit caches
+            results, rec = measure(client, reqs)
+            rec.update({
+                "ok": sum(1 for r in results if r.ok),
+                "failed": sum(1 for r in results if not r.ok),
+                "servers_used": len({r.server for r in results}),
+                "attempts_max": max(r.attempts for r in results),
+            })
+            out["workers"][str(fleet)] = rec
+    for p in procs:
+        p.send_signal(signal.SIGTERM)
+    for p in procs:
+        p.wait(timeout=120)
+
+# -- autoscaler: grow 1 -> 2 under pressure, shrink back when idle ----------
+auto = AutoscaleConfig(min_workers=1, max_workers=2,
+                       grow_queue_depth=2.0, grow_windows=2,
+                       shrink_windows=4, eval_period_s=0.3)
+with FrontDoor(port=0, lease_ttl_s=5.0, autoscale=auto) as fd:
+    assert wait_servers(fd, 1), "autoscaler never spawned min_workers"
+    with FabricClient(fd.host, fd.port) as client:
+        client.serve(reqs[:2])  # warm the first worker
+        t0 = time.monotonic()
+        futs = [client.submit(r) for r in reqs * 3]  # queue pressure
+        grew = wait_servers(fd, 2)
+        grow_s = time.monotonic() - t0
+        results = [f.result() for f in futs]
+        ok = sum(1 for r in results if r.ok)
+        failed = len(results) - ok
+    # idle now: the policy needs shrink_windows quiet evaluations, then
+    # the youngest worker drains and exits
+    t0 = time.monotonic()
+    shrank = False
+    t_end = time.monotonic() + 120.0
+    while time.monotonic() < t_end:
+        if fd._scaler.count() <= 1:
+            shrank = True
+            break
+        time.sleep(0.1)
+    out["autoscaler"] = {
+        "grew": grew, "grow_s": round(grow_s, 2),
+        "shrank": shrank, "shrink_s": round(time.monotonic() - t0, 2),
+        "ok": ok, "failed": failed,
+        "config": {"grow_windows": auto.grow_windows,
+                   "shrink_windows": auto.shrink_windows,
+                   "eval_period_s": auto.eval_period_s},
+    }
+
+print(json.dumps(out))
+"""
+
+
+def _run_child(code: str, argv, env) -> Dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", code] + [str(a) for a in argv],
+        capture_output=True, text=True, env=env, timeout=3000)
+    if proc.returncode != 0:
+        emit("serve/error", 0.0, proc.stderr[-300:].replace(",", ";"))
+        raise RuntimeError(
+            f"serve bench child failed:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
 
 def run(fast: bool = True, out_json: str = "BENCH_serve.json") -> Dict:
     R, n, k = (8, 1500, 4) if fast else (16, 4000, 8)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    proc = subprocess.run(
-        [sys.executable, "-c", _CHILD, str(R), str(n), str(k)],
-        capture_output=True, text=True, env=env, timeout=3000)
-    if proc.returncode != 0:
-        emit("serve/error", 0.0, proc.stderr[-300:].replace(",", ";"))
-        raise RuntimeError(f"serve bench child failed:\n{proc.stderr[-2000:]}")
-    result = json.loads(proc.stdout.splitlines()[-1])
+    result = _run_child(_CHILD, [R, n, k], env)
+    # the fabric child spawns worker processes that size their own jax
+    # runtimes — an inherited device-count flag would skew them
+    fabric_env = dict(env)
+    fabric_env.pop("XLA_FLAGS", None)
+    result["fabric"] = _run_child(_FABRIC_CHILD, [R, n // 2, k],
+                                  fabric_env)
     for meshes, loads in result["meshes"].items():
         for load, rec in loads.items():
             emit(f"serve/{meshes}mesh/{load}", rec["wall_s"],
@@ -153,6 +294,14 @@ def run(fast: bool = True, out_json: str = "BENCH_serve.json") -> Dict:
     emit("serve/batched/hot_mix", b["wall_s"],
          f"rps={b['throughput_rps']};speedup={b['batch_speedup']};"
          f"coalesced={b['coalesced']};bit_identical={b['bit_identical']}")
+    for fleet, rec in result["fabric"]["workers"].items():
+        emit(f"serve/fabric/{fleet}proc", rec["wall_s"],
+             f"rps={rec['throughput_rps']};p99={rec['latency_p99_s']};"
+             f"servers={rec['servers_used']};failed={rec['failed']}")
+    a = result["fabric"]["autoscaler"]
+    emit("serve/fabric/autoscale", a["grow_s"],
+         f"grew={a['grew']};shrank={a['shrank']};"
+         f"shrink_s={a['shrink_s']};failed={a['failed']}")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(result, f, indent=1)

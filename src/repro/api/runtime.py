@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import os
 import sys
+from typing import Optional
 
 _FLAG = "--xla_force_host_platform_device_count"
 
@@ -50,12 +51,87 @@ def device_slices(num_slices: int, devices_per_slice: int):
     devs = jax.devices()
     need = num_slices * devices_per_slice
     if len(devs) < need:
+        # name the shortfall AND the largest feasible carve, both ways
+        # round — the caller decides whether to shrink the slice count
+        # or the slices themselves
+        feas_slices = len(devs) // devices_per_slice
+        feas_per = len(devs) // num_slices
+        if feas_slices >= 1:
+            hint = (f"largest feasible: {feas_slices} slice(s) of "
+                    f"{devices_per_slice}")
+            if feas_per >= 1 and feas_per != devices_per_slice:
+                hint += (f", or {num_slices} slice(s) of {feas_per} "
+                         "device(s)")
+        elif feas_per >= 1:
+            hint = (f"largest feasible: {num_slices} slice(s) of "
+                    f"{feas_per} device(s)")
+        else:
+            hint = "no carve of this shape is feasible"
         raise RuntimeError(
-            f"cannot carve {num_slices} slices of {devices_per_slice} "
-            f"device(s) from {len(devs)} visible device(s); force more "
-            "with force_host_devices() before any jax computation")
+            f"cannot carve {num_slices} slice(s) of {devices_per_slice} "
+            f"device(s) ({need} total): only {len(devs)} device(s) "
+            f"available; {hint}. Force more host devices with "
+            "force_host_devices() before any jax computation")
     return [devs[i * devices_per_slice:(i + 1) * devices_per_slice]
             for i in range(num_slices)]
+
+
+def distributed_init(coordinator_address: Optional[str] = None,
+                     num_processes: Optional[int] = None,
+                     process_id: Optional[int] = None,
+                     local_device_ids=None) -> dict:
+    """Multi-process jax runtime for the serving fabric's workers.
+
+    Wraps ``jax.distributed.initialize`` so each fabric worker process
+    owns its own mesh over *its* slice of a real multi-host topology —
+    the mode that lets the ``dist`` / ``dist-grid`` backends stop
+    depending on ``force_host_devices``-faked devices. Arguments fall
+    back to the ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` /
+    ``REPRO_PROCESS_ID`` environment variables (and from there to jax's
+    own cluster auto-detection inputs).
+
+    ``num_processes`` of 1 (or unset with no coordinator) is the
+    single-process mode: a deliberate no-op, so the same worker entry
+    point runs unchanged on a laptop, in CI (with
+    ``force_host_devices``) and on a cluster. Returns an info dict
+    (``mode``, ``process_id``, ``num_processes``).
+
+    Must run before any jax computation: like ``force_host_devices``,
+    this raises ``RuntimeError`` once a backend exists rather than
+    silently doing nothing.
+    """
+    coordinator_address = coordinator_address or \
+        os.environ.get("REPRO_COORDINATOR") or None
+    if num_processes is None:
+        env_np = os.environ.get("REPRO_NUM_PROCESSES")
+        num_processes = int(env_np) if env_np else None
+    if process_id is None:
+        env_pid = os.environ.get("REPRO_PROCESS_ID")
+        process_id = int(env_pid) if env_pid else None
+    if coordinator_address is None and (num_processes or 1) <= 1:
+        return {"mode": "single-process", "process_id": 0,
+                "num_processes": 1}
+    if num_processes is not None and num_processes < 1:
+        raise ValueError(
+            f"num_processes must be >= 1, got {num_processes}")
+    if process_id is not None and num_processes is not None and \
+            not (0 <= process_id < num_processes):
+        raise ValueError(
+            f"process_id {process_id} out of range for "
+            f"{num_processes} process(es)")
+    if jax_backend_initialized():
+        raise RuntimeError(
+            "cannot initialize the multi-process runtime: jax already "
+            "has a backend in this process. Call distributed_init() "
+            "before any jax computation (first thing in main()).")
+    import jax
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes, process_id=process_id,
+        local_device_ids=local_device_ids)
+    return {"mode": "multi-process",
+            "process_id": jax.process_index(),
+            "num_processes": jax.process_count()}
 
 
 def force_host_devices(n: int) -> None:

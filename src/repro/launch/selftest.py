@@ -22,7 +22,13 @@ shape-bucketed batched dispatch (``--test batch``: a duplicate-heavy
 hot mix is served in batches bit-identically to solo runs with
 coalescing observed in the metrics, and the stacked level-0 clustering
 path — forced on even on CPU hosts — reproduces solo results bit for
-bit). Prints one JSON line per test; exit code 0 iff all pass.
+bit), and the cross-process fabric (``--test fabric``, *not* part of
+``all`` because it spawns real worker subprocesses: a front door plus
+two worker processes serve bit-identically to solo runs, a SIGKILLed
+worker's admitted requests fail over to the survivor, and a SIGTERM
+drain finishes in-flight work and answers queued tickets with
+structured errors — nothing hangs). Prints one JSON line per test;
+exit code 0 iff all pass.
 """
 import argparse
 import json
@@ -35,7 +41,7 @@ def main() -> int:
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
                              "contract", "partition", "refine", "balance",
-                             "smoke", "api", "serve", "batch"])
+                             "smoke", "api", "serve", "batch", "fabric"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -494,6 +500,138 @@ def main() -> int:
                all(np.array_equal(o.assignment, s.assignment) and
                    o.cut == s.cut for o, s in zip(out, solo)),
                cuts=[o.cut for o in out])
+
+    if args.test == "fabric":
+        # not part of "all": spawns real worker subprocesses (each
+        # imports jax), so it runs as its own CI step
+        import os
+        import signal as _signal
+        import subprocess
+        import time
+
+        import repro
+        from repro.api import GraphSpec, PartitionRequest, Partitioner
+        from repro.fabric import FabricClient, status_of
+
+        src_dir = os.path.dirname(os.path.dirname(repro.__file__))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_dir + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        env.pop("XLA_FLAGS", None)  # workers pick their own device count
+
+        def spawn(role, *extra):
+            proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.fabric", role,
+                 *extra],
+                stdout=subprocess.PIPE, env=env, text=True)
+            ready = json.loads(proc.stdout.readline())
+            return proc, ready
+
+        fd_proc, fd_ready = spawn("frontdoor", "--lease-ttl-s", "3.0")
+        host, port = fd_ready["host"], fd_ready["port"]
+        w_procs = {}
+        for i in range(2):
+            proc, _ = spawn("worker", "--frontdoor", f"{host}:{port}",
+                            "--server-id", f"selftest-w{i}",
+                            "--heartbeat-s", "0.3")
+            w_procs[f"selftest-w{i}"] = proc
+        t_end = time.monotonic() + 60
+        while time.monotonic() < t_end and \
+                len(status_of(host, port)["servers"]) < 2:
+            time.sleep(0.1)
+        regs = [s["server_id"] for s in status_of(host, port)["servers"]]
+        report("fabric.registered", sorted(regs) ==
+               ["selftest-w0", "selftest-w1"], servers=regs)
+
+        engine = Partitioner()
+        nn = max(600, args.n // 4)
+        mixed = [PartitionRequest(
+            graph=GraphSpec(args.family, nn * (1 + i % 2), 8.0,
+                            seed=41 + i % 3),
+            k=max(2, args.k // 2) * (1 + i % 2), config=cfg)
+            for i in range(6)]
+        solo = [engine.run(r) for r in mixed]
+        try:
+            with FabricClient(host, port) as client:
+                rs = client.serve(mixed)
+                same = all(r.ok and np.array_equal(r.assignment,
+                                                   s.assignment)
+                           for r, s in zip(rs, solo))
+                report("fabric.bit_identical_2proc",
+                       same and {r.server for r in rs} ==
+                       set(w_procs), servers=sorted(
+                           {str(r.server) for r in rs}))
+
+                # SIGKILL one worker while it provably owns a request:
+                # every admitted ticket must still resolve ok via
+                # failover to the survivor — none may hang
+                slow = [PartitionRequest(
+                    graph=GraphSpec(args.family, max(2000, args.n // 2),
+                                    8.0, seed=51 + i % 2),
+                    k=args.k, config=cfg) for i in range(6)]
+                slow_solo = [engine.run(r) for r in slow]
+                futs = [client.submit(r) for r in slow]
+                victim = None
+                t_end = time.monotonic() + 60
+                while victim is None and time.monotonic() < t_end:
+                    for s in status_of(host, port)["servers"]:
+                        if s.get("inflight", 0) > 0:
+                            victim = s["server_id"]
+                            break
+                    time.sleep(0.02)
+                report("fabric.victim_had_work", victim is not None,
+                       victim=victim)
+                w_procs[victim].send_signal(_signal.SIGKILL)
+                rs = [f.result(timeout=600) for f in futs]
+                survivor = next(s for s in w_procs if s != victim)
+                same = all(r.ok and np.array_equal(r.assignment,
+                                                   s.assignment)
+                           for r, s in zip(rs, slow_solo))
+                retried = sum(1 for r in rs if r.attempts > 1)
+                report("fabric.sigkill_failover",
+                       same and retried >= 1 and
+                       all(r.server == survivor for r in rs),
+                       retried=retried,
+                       attempts=[r.attempts for r in rs])
+
+                # SIGTERM drain of the survivor: the in-flight request
+                # finishes ok, queued ones resolve with a structured
+                # error (deadline at the latest) — nothing hangs
+                # let the survivor heartbeat an idle window first:
+                # worker_inflight below must come from *our* submissions,
+                # not a stale renewal from the failover phase
+                time.sleep(0.8)
+                futs = [client.submit(r, deadline_s=20.0)
+                        for r in slow[:4]]
+                # wait for the attempt to be running on the worker's
+                # own mesh (heartbeated back), not merely dispatched —
+                # a merely-queued ticket legitimately drains to a
+                # server_closed error instead of finishing
+                t_end = time.monotonic() + 60
+                while time.monotonic() < t_end and not any(
+                        s.get("worker_inflight", 0) > 0
+                        for s in status_of(host, port)["servers"]):
+                    time.sleep(0.02)
+                w_procs[survivor].send_signal(_signal.SIGTERM)
+                rs = [f.result(timeout=600) for f in futs]
+                w_procs[survivor].wait(timeout=120)
+                n_ok = sum(1 for r in rs if r.ok)
+                structured = all(
+                    r.ok or r.error in ("server_closed", "worker_failed",
+                                        "no_worker", "deadline_exceeded")
+                    for r in rs)
+                report("fabric.sigterm_drain",
+                       n_ok >= 1 and structured,
+                       ok=n_ok, errors=[r.error for r in rs if not r.ok])
+        finally:
+            for proc in w_procs.values():
+                if proc.poll() is None:
+                    proc.kill()
+            fd_proc.send_signal(_signal.SIGTERM)
+            try:
+                fd_proc.wait(timeout=30)
+            except subprocess.TimeoutExpired:
+                fd_proc.kill()
 
     return 0 if ok else 1
 

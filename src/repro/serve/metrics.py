@@ -36,6 +36,9 @@ def percentile(sorted_xs: List[float], p: float) -> float:
 class ServeMetrics:
     """Thread-safe counters + bounded reservoirs for one server."""
 
+    _COUNTERS = ("submitted", "completed", "failed", "expired",
+                 "rejected", "retried", "batches", "coalesced")
+
     def __init__(self, num_workers: int):
         self._lock = threading.Lock()
         self.submitted = 0
@@ -51,6 +54,22 @@ class ServeMetrics:
         self._latencies: List[float] = []
         self._queue_waits: List[float] = []
         self._depth_samples: List[int] = []
+        # windowed state: counter values at the last snapshot_window()
+        # call plus since-then reservoirs, so consumers (autoscaler,
+        # front door health) see *rates*, not lifetime totals
+        self._win_base: Dict[str, int] = {k: 0 for k in self._COUNTERS}
+        self._win_latencies: List[float] = []
+        self._win_waits: List[float] = []
+        self._win_depths: List[int] = []
+
+    def resize_workers(self, num_workers: int) -> None:
+        """Grow ``per_worker_served`` when the worker/server count
+        changes at runtime (autoscaling). Growth only — counts for
+        departed workers are history, not garbage."""
+        with self._lock:
+            if num_workers > len(self.per_worker_served):
+                self.per_worker_served.extend(
+                    [0] * (num_workers - len(self.per_worker_served)))
 
     # -- recording (called by server/dispatcher/workers) ---------------
 
@@ -58,10 +77,12 @@ class ServeMetrics:
         with self._lock:
             self.submitted += 1
             self._sample(self._depth_samples, depth)
+            self._sample(self._win_depths, depth)
 
     def on_dispatch(self, depth: int) -> None:
         with self._lock:
             self._sample(self._depth_samples, depth)
+            self._sample(self._win_depths, depth)
 
     def on_retry(self) -> None:
         with self._lock:
@@ -94,11 +115,17 @@ class ServeMetrics:
                 self.failed += 1
                 if expired:
                     self.expired += 1
-            nw = len(self.per_worker_served)
-            if worker is not None and 0 <= worker < nw:
+            if worker is not None and worker >= 0:
+                # auto-grow: the fabric front door indexes servers that
+                # join at runtime, so a fixed-size list would drop them
+                if worker >= len(self.per_worker_served):
+                    self.per_worker_served.extend(
+                        [0] * (worker + 1 - len(self.per_worker_served)))
                 self.per_worker_served[worker] += 1
             self._sample(self._latencies, latency_s)
             self._sample(self._queue_waits, queue_wait_s)
+            self._sample(self._win_latencies, latency_s)
+            self._sample(self._win_waits, queue_wait_s)
 
     def _sample(self, reservoir: list, x) -> None:
         if len(reservoir) >= _MAX_SAMPLES:
@@ -139,3 +166,35 @@ class ServeMetrics:
             }
         )
         return out
+
+    def snapshot_window(self) -> Dict[str, object]:
+        """Deltas since the last ``snapshot_window()`` call (rates, not
+        lifetime totals): counter increments, latency/queue-wait
+        percentiles over the window's own samples, and the window's
+        queue-depth profile. Resets the window — callers own the
+        cadence (the autoscaler's evaluation period, a fabric worker's
+        heartbeat). First call returns everything since construction."""
+        with self._lock:
+            counts = {k: getattr(self, k) for k in self._COUNTERS}
+            out: Dict[str, object] = {
+                k: counts[k] - self._win_base[k] for k in self._COUNTERS
+            }
+            self._win_base = counts
+            lat = sorted(self._win_latencies)
+            wait = sorted(self._win_waits)
+            depth = self._win_depths
+            out.update(
+                {
+                    "latency_p50_s": round(percentile(lat, 50), 6),
+                    "latency_p99_s": round(percentile(lat, 99), 6),
+                    "queue_wait_p99_s": round(percentile(wait, 99), 6),
+                    "queue_depth_max": max(depth, default=0),
+                    "queue_depth_mean": round(
+                        sum(depth) / len(depth), 3) if depth else 0.0,
+                    "queue_depth_last": depth[-1] if depth else 0,
+                }
+            )
+            self._win_latencies = []
+            self._win_waits = []
+            self._win_depths = []
+            return out

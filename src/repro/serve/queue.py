@@ -42,7 +42,9 @@ class Ticket:
     need: int = 1  # PE count the resolved backend wants
     bucket: Optional[tuple] = None  # shape bucket (batchable) or None
     attempts: int = 0  # failed attempts so far
-    excluded: Set[int] = dataclasses.field(default_factory=set)
+    # mesh ids (in-process server) or server-id strings (fabric front
+    # door) this ticket must not be routed to again
+    excluded: Set = dataclasses.field(default_factory=set)
     worker: Optional[int] = None  # worker currently assigned
     dispatch_t: Optional[float] = None  # first leave-the-queue time
     errors: List[str] = dataclasses.field(default_factory=list)

@@ -52,3 +52,18 @@ def pick_worker(need: int, candidates: Sequence) -> Optional[object]:
         if best_key is None or key < best_key:
             best, best_key = w, key
     return best
+
+
+def pick_server(need: int, candidates: Sequence) -> Optional[object]:
+    """Best-fitting fabric *server* from ``candidates`` (objects
+    exposing ``devices``, ``inflight`` and a string ``sid``) — the same
+    exact-match / smallest-fit / any ranking as :func:`pick_worker`,
+    with the deterministic tiebreak on the server id string. Pure, so
+    the cross-process front door routes with the in-process policy."""
+    best = None
+    best_key = None
+    for s in candidates:
+        key = rank(need, s.devices, s.inflight, 0)[:3] + (s.sid,)
+        if best_key is None or key < best_key:
+            best, best_key = s, key
+    return best

@@ -711,6 +711,17 @@ class PartitionServer:
 
     # -- introspection / supervision -----------------------------------
 
+    def metrics_window(self) -> Dict[str, Any]:
+        """Windowed metrics deltas since the last call (see
+        ``ServeMetrics.snapshot_window``) plus the live queue depth —
+        the rate signal a fabric worker heartbeats to the front door
+        and the autoscaler consumes."""
+        win = self._metrics.snapshot_window()
+        win["queue_depth_last"] = self._queue.depth()
+        win["inflight"] = sum(w.inflight for w in self._workers)
+        win["alive_workers"] = sum(1 for w in self._workers if w.alive)
+        return win
+
     def stats(self) -> Dict[str, Any]:
         snap = self._metrics.snapshot()
         served = snap["per_worker_served"]
