@@ -1,7 +1,8 @@
 """CI bench regression gate — compare fresh artifacts to baselines.
 
 CI regenerates ``BENCH_api.json`` / ``BENCH_dist.json`` /
-``BENCH_balance.json`` / ``BENCH_serve.json`` in the working tree; this
+``BENCH_balance.json`` / ``BENCH_serve.json`` / ``BENCH_kernels.json``
+in the working tree; this
 gate compares them against the *committed* baselines (``git show
 HEAD:<file>`` by default, or ``--baseline-dir``) and fails the job —
 instead of only uploading artifacts — when:
@@ -43,7 +44,8 @@ from typing import List, Optional, Tuple
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 DEFAULT_FILES = ["BENCH_api.json", "BENCH_dist.json",
-                 "BENCH_balance.json", "BENCH_serve.json"]
+                 "BENCH_balance.json", "BENCH_serve.json",
+                 "BENCH_kernels.json"]
 
 # keys gated as "lower is better" wall-clock seconds
 TIME_KEYS = {"time_s", "wall_s", "s_per_round", "latency_p50_s",
@@ -126,8 +128,9 @@ def check_invariants(node, path: str, failures: List[str]) -> None:
             elif key == "failed" and isinstance(val, int) and val > 0:
                 failures.append(f"{sub}: {val} failed request(s)")
             elif key == "bit_identical" and val is False:
-                failures.append(f"{sub}: batched results deviate from "
-                                "solo runs")
+                failures.append(f"{sub}: bit-identity invariant violated "
+                                "(batched vs solo, or fused vs composed "
+                                "kernels)")
             elif key == "batch_speedup" and isinstance(val, (int, float)) \
                     and val < MIN_BATCH_SPEEDUP:
                 failures.append(

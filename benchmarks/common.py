@@ -26,7 +26,15 @@ def instance_set(scale: str = "small") -> List[Tuple[str, object]]:
     return out
 
 
-def timed(fn: Callable, repeats: int = 1):
+def timed(fn: Callable, repeats: int = 1, warmup: int = 1):
+    """Best-of-``repeats`` wall time after ``warmup`` discarded runs.
+
+    The warmup run absorbs jit/Pallas compilation so the recorded
+    numbers (and every committed BENCH_*.json built on them) measure
+    steady state even at ``repeats=1``; pass ``warmup=0`` to time a
+    cold start deliberately."""
+    for _ in range(warmup):
+        fn()
     vals = []
     out = None
     for _ in range(repeats):

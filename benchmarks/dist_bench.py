@@ -8,6 +8,11 @@ path's exchange timings and payload bytes, and the peak *persistent*
 replicated bytes per PE each model carries (the replicated table is
 O(n); the owner shard is O(n/P + k) — the scaling argument of ROADMAP's
 larger-n scenarios, measured run-over-run).
+
+Each mode runs twice and keeps the second trace: the discarded warmup
+absorbs jit/Pallas compilation so the committed per-level numbers are
+steady state. ``kernel`` selects the hot-loop implementation
+(docs/KERNELS.md); the default commits the fused-kernel numbers.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _CHILD = r"""
 import json, sys
 P = int(sys.argv[1]); n = int(sys.argv[2]); k = int(sys.argv[3])
+kernel = sys.argv[4]
 from repro.api import runtime
 runtime.force_host_devices(P)
 from repro.api import PartitionRequest, Partitioner
@@ -29,15 +35,18 @@ from repro.core import PartitionerConfig
 from repro.graphs import generators
 
 g = generators.make("rgg2d", n, 8.0, seed=29)
-out = {"P": P, "n": g.n, "m": g.m, "k": k, "modes": {}}
+out = {"P": P, "n": g.n, "m": g.m, "k": k, "kernel": kernel, "modes": {}}
+engine = Partitioner()
 for name, contraction, weights in (
         ("host_replicated", "host", "replicated"),
         ("sharded_owner", "sharded", "owner")):
     cfg = PartitionerConfig(contraction_limit=128, ip_repetitions=1,
                             num_chunks=4, contraction=contraction,
-                            weights=weights)
-    res = Partitioner().run(PartitionRequest(
-        graph=g, k=k, config=cfg, backend="dist-grid", devices=P))
+                            weights=weights, kernel=kernel)
+    req = PartitionRequest(graph=g, k=k, config=cfg, backend="dist-grid",
+                           devices=P)
+    engine.run(req)       # discarded warmup: absorbs jit/Pallas compiles
+    res = engine.run(req)  # steady state (same shapes, warm caches)
     levels = [t for t in res.trace
               if t["phase"].startswith("dist-coarsen")]
     unc = [t for t in res.trace if t["phase"] == "dist-uncoarsen"]
@@ -63,8 +72,8 @@ print(json.dumps(out))
 """
 
 
-def run(fast: bool = True, P: int = 4, out_json: str = "BENCH_dist.json"
-        ) -> Dict:
+def run(fast: bool = True, P: int = 4, out_json: str = "BENCH_dist.json",
+        kernel: str = "fused") -> Dict:
     from .common import emit
 
     n = 3000 if fast else 20000
@@ -72,7 +81,7 @@ def run(fast: bool = True, P: int = 4, out_json: str = "BENCH_dist.json"
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     proc = subprocess.run(
-        [sys.executable, "-c", _CHILD, str(P), str(n), str(k)],
+        [sys.executable, "-c", _CHILD, str(P), str(n), str(k), kernel],
         capture_output=True, text=True, env=env, timeout=820)
     lines = [l for l in proc.stdout.splitlines() if l.startswith("{")]
     assert proc.returncode == 0 and lines, proc.stderr[-2000:]

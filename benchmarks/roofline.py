@@ -34,9 +34,24 @@ def load_cells(art_dir: str) -> List[Dict]:
     return cells
 
 
+def cell_name(cell: Dict) -> str:
+    mesh = cell.get("mesh")
+    mesh_s = "x".join(map(str, mesh)) if mesh else "?"
+    return (f"{cell.get('arch', '?')}/{cell.get('shape', '?')}/"
+            f"mesh={mesh_s}")
+
+
 def roofline_row(cell: Dict) -> Optional[Dict]:
     cost = cell.get("cost_analysis", {})
     if "flops" not in cost:
+        # a silent drop here would make a dry-run misconfiguration read
+        # as "no kernels regressed" — name the cell and the reason
+        reason = ("cost_analysis missing entirely (dry-run artifact "
+                  "predates cost capture?)" if not cost else
+                  "cost_analysis has no 'flops' key (backend did not "
+                  "report HLO cost)")
+        print(f"[roofline:skip] {cell_name(cell)}: {reason}",
+              file=sys.stderr)
         return None
     n_dev = cell["n_devices"]
     flops_dev = cell.get("hlo_flops_per_device_corrected") or cost["flops"]
@@ -64,6 +79,42 @@ def roofline_row(cell: Dict) -> Optional[Dict]:
         "temp_gb_per_dev":
             cell["memory_analysis"].get("temp_size_bytes", 0) / 1e9,
     }
+
+
+def kernel_rows(kernels: Dict) -> List[Dict]:
+    """Achieved-vs-peak roofline terms for the fused hot-loop kernels.
+
+    ``kernels`` is the ``BENCH_kernels.json`` ``"kernels"`` mapping:
+    each record carries analytic per-invocation ``flops`` / ``bytes``
+    and a measured fused ``time_s``. Returns one row per kernel with
+    achieved FLOP/s and B/s, their fractions of the v5e peaks, the
+    arithmetic intensity, and which roofline ceiling (compute vs HBM)
+    binds at that intensity. On CPU runners the fused path is Pallas
+    interpret mode, so achieved fractions are tiny by construction —
+    they are tracked for run-over-run regressions, not as TPU truth.
+    """
+    ridge = PEAK_FLOPS / HBM_BW        # FLOP/B where the ceilings cross
+    rows = []
+    for name, rec in sorted(kernels.items()):
+        t = float(rec.get("fused", {}).get("time_s") or 0.0)
+        flops = float(rec.get("flops", 0))
+        bts = float(rec.get("bytes", 0))
+        if not t or not bts:
+            print(f"[roofline:skip] kernel {name}: no fused time_s or "
+                  "byte count in the bench record", file=sys.stderr)
+            continue
+        intensity = flops / bts
+        rows.append({
+            "kernel": name,
+            "intensity_flop_per_byte": round(intensity, 3),
+            "bound": "compute" if intensity >= ridge else "memory",
+            "achieved_flops": flops / t,
+            "achieved_bytes_s": bts / t,
+            "peak_flops_fraction": flops / t / PEAK_FLOPS,
+            "peak_hbm_fraction": bts / t / HBM_BW,
+            "vmem_bytes": rec.get("vmem_bytes"),
+        })
+    return rows
 
 
 def run(art_dir: str = "artifacts/dryrun", out_md: Optional[str] = None

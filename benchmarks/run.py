@@ -19,7 +19,10 @@ Sections:
   large_k        — Table 2: feasibility at large k
   balancer       — §4 Balancing: repair of adversarial imbalance
   scaling        — Fig 4-6: weak/strong scaling over simulated PEs
-  kernels        — Pallas kernel micro-bench + VMEM tile accounting
+  kernels        — fused vs composed hot-loop kernels (bit-identity,
+                   steady-state times, VMEM + roofline accounting),
+                   emits BENCH_kernels.json; plus the legacy
+                   micro-kernel CSV rows
   roofline       — §Roofline table (needs artifacts/dryrun from
                    ``python -m repro.launch.dryrun --all --out ...``)
 
@@ -63,7 +66,7 @@ def main() -> None:
         balancer_stats.run()
     if "kernels" in sections:
         from . import kernels_bench
-        kernels_bench.run()
+        kernels_bench.run(fast=args.fast)
     if "scaling" in sections:
         from . import scaling
         scaling.run(pes=(1, 2, 4) if args.fast else (1, 2, 4, 8))

@@ -58,7 +58,9 @@ class PartitionRequest:
     loop's cluster-weight enforcement) over the level's shards instead
     of gathering every uncoarsening level to the host. ``None`` defers
     to the preset or explicit config; the single-process backends ignore
-    all three.
+    all three. ``kernel`` picks the hot-loop implementation on every
+    backend ("auto" | "fused" | "composed", docs/KERNELS.md) — results
+    are bit-identical either way.
     """
     graph: Union[Graph, GraphSpec]
     k: int
@@ -73,6 +75,7 @@ class PartitionRequest:
     contraction: Optional[str] = None           # "host" | "sharded"
     weights: Optional[str] = None               # "replicated" | "owner"
     balance: Optional[str] = None               # "host" | "dist"
+    kernel: Optional[str] = None                # "auto"|"fused"|"composed"
 
     def validate(self) -> "PartitionRequest":
         from .backends import available_backends
@@ -101,6 +104,9 @@ class PartitionRequest:
         if self.balance not in (None, "host", "dist"):
             raise ValueError(
                 f"balance must be 'host' or 'dist', got {self.balance!r}")
+        if self.kernel is not None:
+            from ..kernels.dispatch import check_kernel_mode
+            check_kernel_mode(self.kernel)
         if self.config is not None:
             self.config.validate()
         if isinstance(self.graph, GraphSpec):
@@ -125,6 +131,8 @@ class PartitionRequest:
             overrides["weights"] = self.weights
         if self.balance is not None:
             overrides["balance"] = self.balance
+        if self.kernel is not None:
+            overrides["kernel"] = self.kernel
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides).validate()
         return cfg

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.format import Graph
+from ..kernels import dispatch
 from . import lp
 from .lp import I32_MAX, _argmax_target, _group_conns, _own_connection
 
@@ -157,13 +158,17 @@ def rebalance(g: Graph,
               top_m: int = 128,
               max_rounds: int = 200,
               seed: int = 0,
+              kernel: str = "auto",
               stats: Optional[Dict] = None) -> np.ndarray:
     """Host driver: run balance rounds until feasible. ``part`` is (n,) block
     ids; ``l_max_vec`` is (k,) per-block budgets.
 
     Already-feasible partitions return immediately without building the
-    O(m) chunk slabs or touching a device. ``stats``, when given, receives
-    ``rounds`` / ``time_s`` / ``gather_bytes`` for benchmarks.
+    O(m) chunk slabs or touching a device. ``kernel="fused"`` runs the
+    round through the ``kernels.bal_round`` Pallas pair (bit-identical;
+    silently keeps the composed round when the ELL slab exceeds the VMEM
+    budget). ``stats``, when given, receives ``rounds`` / ``time_s`` /
+    ``gather_bytes`` for benchmarks.
     """
     n = g.n
     k = int(l_max_vec.shape[0])
@@ -193,15 +198,31 @@ def rebalance(g: Graph,
     parent_j = jnp.asarray(pr_p)
     valid = jnp.asarray(np.arange(n_pad + 1) < n)
     restricted = parent is not None
-    src = jnp.asarray(chunks.src[0])
-    dst = jnp.asarray(chunks.dst[0])
-    w = jnp.asarray(chunks.w[0])
+    fused_ell = None
+    if dispatch.resolve_kernel_mode(kernel) == "fused":
+        from ..kernels.bal_round import ops as bal_ops
+        idx, ew = bal_ops.build_balance_ell(g, n_pad)
+        if bal_ops.balance_ell_fits(idx.shape[0], idx.shape[1],
+                                    restricted=restricted):
+            fused_ell = (jnp.asarray(idx), jnp.asarray(ew))
+    if fused_ell is None:
+        src = jnp.asarray(chunks.src[0])
+        dst = jnp.asarray(chunks.dst[0])
+        w = jnp.asarray(chunks.w[0])
     rounds = 0
     for r in range(max_rounds):
-        labels, block_w, overloaded = balance_round(
-            labels, block_w, l_max_j, parent_j, src, dst, w, vw_j, valid,
-            jnp.uint32((seed * 7919 + r) % (2**32)), n=n_pad, top_m=top_m,
-            restricted=restricted)
+        salt = jnp.uint32((seed * 7919 + r) % (2**32))
+        if fused_ell is not None:
+            from ..kernels.bal_round import ops as bal_ops
+            labels, block_w, overloaded = bal_ops.balance_round_fused(
+                labels, block_w, l_max_j, parent_j, fused_ell[0],
+                fused_ell[1], vw_j, valid, salt, n=n_pad, top_m=top_m,
+                restricted=restricted,
+                interpret=dispatch.kernel_interpret())
+        else:
+            labels, block_w, overloaded = balance_round(
+                labels, block_w, l_max_j, parent_j, src, dst, w, vw_j,
+                valid, salt, n=n_pad, top_m=top_m, restricted=restricted)
         rounds = r + 1
         if not bool(overloaded):
             break

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.format import Graph, degree_bucket_order, permute
+from ..kernels import dispatch
+from ..kernels.lp_move import ops as move_ops
 from . import lp
 
 
@@ -65,18 +67,28 @@ def enforce_cluster_weights(labels: np.ndarray, vweights: np.ndarray,
     return out
 
 
-def cluster_prepare(g: Graph, num_chunks: int, seed: int):
+def cluster_prepare(g: Graph, num_chunks: int, seed: int,
+                    kernel: str = "composed"):
     """Host-side setup shared by the solo and stacked clustering paths:
     seeded degree-bucket reorder, permuted graph, padded chunk slabs.
     Returns ``(perm, g2, chunks)``. Kept per-request even when requests
     are batched — the reorder draws from a per-request RNG, so any
-    batch-level change here would break solo bit-identity."""
+    batch-level change here would break solo bit-identity.
+
+    ``kernel="fused"`` builds ELL slabs for the Pallas move kernel
+    instead of arc slabs (falling back to arc slabs when the chunk
+    working set would not fit the kernel's VMEM budget); both describe
+    identical vertex ranges (``lp.chunk_bounds``)."""
     n = g.n
     rng = np.random.default_rng(seed)
     order = degree_bucket_order(g, rng)
     perm = np.empty(n, dtype=np.int64)
     perm[order] = np.arange(n)
     g2, _ = permute(g, perm)
+    if kernel == "fused":
+        chunks = move_ops.build_move_chunks(g2, num_chunks)
+        if move_ops.move_chunks_fit_vmem(chunks):
+            return perm, g2, chunks
     chunks = lp.build_chunks(g2, num_chunks)
     return perm, g2, chunks
 
@@ -102,13 +114,19 @@ def cluster(g: Graph,
             max_cluster_weight: int,
             num_iterations: int = 3,
             num_chunks: int = 8,
-            seed: int = 0) -> np.ndarray:
+            seed: int = 0,
+            kernel: str = "auto") -> np.ndarray:
     """Size-constrained LP clustering. Returns cluster labels (n,) in the
-    input graph's vertex numbering; label values are arbitrary ids."""
+    input graph's vertex numbering; label values are arbitrary ids.
+
+    ``kernel`` selects the chunk-move implementation (see
+    ``kernels.dispatch``); "fused" and "composed" produce bit-identical
+    labels."""
     n = g.n
     if n <= 1:
         return np.zeros(n, dtype=np.int64)
-    perm, g2, chunks = cluster_prepare(g, num_chunks, seed)
+    mode = dispatch.resolve_kernel_mode(kernel)
+    perm, g2, chunks = cluster_prepare(g, num_chunks, seed, kernel=mode)
     np_pad = chunks.n_pad
     labels = jnp.arange(np_pad + 1, dtype=jnp.int32)
     vw = np.zeros(np_pad + 1, dtype=np.int32)
@@ -116,9 +134,19 @@ def cluster(g: Graph,
     vw = jnp.asarray(vw)
     cluster_w = vw
     W = jnp.int32(max(1, max_cluster_weight))
-    for it in range(num_iterations):
-        labels, cluster_w = lp.cluster_iteration(
-            labels, cluster_w, jnp.asarray(chunks.src),
-            jnp.asarray(chunks.dst), jnp.asarray(chunks.w), vw, W,
-            jnp.uint32(cluster_seed(seed, it)), n=np_pad)
+    if isinstance(chunks, move_ops.MoveChunks):
+        idx, cw_slab = jnp.asarray(chunks.idx), jnp.asarray(chunks.w)
+        v0s = jnp.asarray(chunks.v0)
+        interp = dispatch.kernel_interpret()
+        for it in range(num_iterations):
+            labels, cluster_w = move_ops.cluster_iteration_fused(
+                labels, cluster_w, idx, cw_slab, v0s, vw, W,
+                jnp.uint32(cluster_seed(seed, it)), n=np_pad,
+                interpret=interp)
+    else:
+        for it in range(num_iterations):
+            labels, cluster_w = lp.cluster_iteration(
+                labels, cluster_w, jnp.asarray(chunks.src),
+                jnp.asarray(chunks.dst), jnp.asarray(chunks.w), vw, W,
+                jnp.uint32(cluster_seed(seed, it)), n=np_pad)
     return cluster_finish(labels, g2, perm, int(W))

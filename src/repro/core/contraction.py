@@ -12,17 +12,26 @@ from typing import Tuple
 import numpy as np
 
 from ..graphs.format import Graph, from_coo
+from ..kernels import dispatch
 
 
-def dedup_arcs(csrc: np.ndarray, cdst: np.ndarray, w: np.ndarray
+def dedup_arcs(csrc: np.ndarray, cdst: np.ndarray, w: np.ndarray,
+               kernel: str = "composed"
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Drop self loops and merge parallel arcs (summing weights).
 
     Returns (src, dst, w) int64 arrays sorted by (src, dst). This is the
     local contraction kernel: ``contract`` runs it over the whole arc
     set, the distributed path runs it per PE before and after the edge
-    exchange.
+    exchange. ``kernel="fused"`` routes through the seg_merge Pallas
+    kernel (bit-identical; silently keeps numpy when the records exceed
+    the kernel's int32/VMEM envelope).
     """
+    if dispatch.resolve_kernel_mode(kernel) == "fused":
+        from ..kernels.seg_merge import ops as seg_ops
+        if seg_ops.dedup_fits(csrc, cdst, w):
+            return seg_ops.dedup_arcs_fused(
+                csrc, cdst, w, interpret=dispatch.kernel_interpret())
     keep = csrc != cdst
     csrc, cdst, w = csrc[keep], cdst[keep], w[keep]
     if csrc.size == 0:
@@ -39,7 +48,8 @@ def dedup_arcs(csrc: np.ndarray, cdst: np.ndarray, w: np.ndarray
             merged)
 
 
-def contract(g: Graph, labels: np.ndarray) -> Tuple[Graph, np.ndarray]:
+def contract(g: Graph, labels: np.ndarray,
+             kernel: str = "composed") -> Tuple[Graph, np.ndarray]:
     """Contract clustering ``labels`` (arbitrary ids). Returns
     (coarse_graph, fine_to_coarse) with fine_to_coarse[v] in [0, n_c)."""
     uniq, cl = np.unique(labels, return_inverse=True)
@@ -47,7 +57,8 @@ def contract(g: Graph, labels: np.ndarray) -> Tuple[Graph, np.ndarray]:
     cvw = np.zeros(nc, dtype=np.int64)
     np.add.at(cvw, cl, g.vweights)
     src = g.arc_tails()
-    csrc, cdst, w = dedup_arcs(cl[src], cl[g.adjncy], g.eweights)
+    csrc, cdst, w = dedup_arcs(cl[src], cl[g.adjncy], g.eweights,
+                               kernel=kernel)
     gc = from_coo(nc, csrc, cdst, eweights=w, vweights=cvw,
                   symmetrize=False, dedup=False)
     return gc, cl.astype(np.int64)

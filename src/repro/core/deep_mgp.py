@@ -45,6 +45,10 @@ class PartitionerConfig:
     contraction: str = "host"              # "host" | "sharded"
     weights: str = "replicated"            # "replicated" | "owner"
     balance: str = "host"                  # "host" | "dist"
+    # hot-loop implementation: "auto" (fused on TPU, composed elsewhere),
+    # "fused" (Pallas kernels), "composed" (XLA pipelines) — bit-identical
+    # results either way; see docs/KERNELS.md
+    kernel: str = "auto"
 
     def validate(self) -> "PartitionerConfig":
         """Reject configurations that would only fail later as opaque
@@ -79,6 +83,8 @@ class PartitionerConfig:
         if self.balance not in ("host", "dist"):
             raise ValueError(
                 f"balance must be 'host' or 'dist', got {self.balance!r}")
+        from ..kernels.dispatch import check_kernel_mode
+        check_kernel_mode(self.kernel)
         return self
 
 
@@ -184,7 +190,7 @@ def extend_partition(g: Graph, part: np.ndarray, block_k: np.ndarray,
                                   parent=np.asarray(parent, dtype=np.int64),
                                   num_iterations=1,
                                   num_chunks=cfg.num_chunks,
-                                  seed=cfg.seed + off)
+                                  seed=cfg.seed + off, kernel=cfg.kernel)
     return part, block_k
 
 
@@ -253,8 +259,9 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
                     f"{G.n}-vertex graph")
         else:
             labels = cluster(G, W, num_iterations=cfg.cluster_iterations,
-                             num_chunks=cfg.num_chunks, seed=cfg.seed + level)
-        Gc, mapping = contract(G, labels)
+                             num_chunks=cfg.num_chunks, seed=cfg.seed + level,
+                             kernel=cfg.kernel)
+        Gc, mapping = contract(G, labels, kernel=cfg.kernel)
         log.info("level %d: n=%d -> n_c=%d (W=%d)", level, G.n, Gc.n, W)
         if Gc.n >= G.n * cfg.min_shrink:
             break  # converged — coarsest level reached
@@ -274,7 +281,8 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
     block_k = np.asarray(counts, dtype=np.int64)
     part = balance_and_refine(G, part, _l_vec(block_k, l_final),
                               num_iterations=cfg.refine_iterations,
-                              num_chunks=cfg.num_chunks, seed=cfg.seed)
+                              num_chunks=cfg.num_chunks, seed=cfg.seed,
+                              kernel=cfg.kernel)
     if trace is not None:
         trace_event(trace, phase="initial", n=G.n, m=G.m,
                     blocks=int(block_k.shape[0]),
@@ -292,7 +300,8 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
         part = balance_and_refine(Gf, part, _l_vec(block_k, l_final),
                                   num_iterations=cfg.refine_iterations,
                                   num_chunks=cfg.num_chunks,
-                                  seed=uncoarsen_seed(cfg.seed, lvl))
+                                  seed=uncoarsen_seed(cfg.seed, lvl),
+                                  kernel=cfg.kernel)
         if trace is not None:
             trace_event(trace, phase="uncoarsen", level=lvl, n=Gf.n,
                         m=Gf.m, blocks=int(block_k.shape[0]),
@@ -308,7 +317,8 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
         block_k = np.concatenate([block_k, np.ones(pad, dtype=np.int64)])
     part = balance_and_refine(g, part, np.full(k, l_final, dtype=np.int64),
                               num_iterations=cfg.refine_iterations,
-                              num_chunks=cfg.num_chunks, seed=cfg.seed + 17)
+                              num_chunks=cfg.num_chunks, seed=cfg.seed + 17,
+                              kernel=cfg.kernel)
     if trace is not None:
         trace_event(trace, phase="final", n=g.n, m=g.m, blocks=k,
                     cut=metrics.edge_cut(g, part),

@@ -54,6 +54,22 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1)).bit_length()
 
 
+def chunk_bounds(g: Graph, num_chunks: int) -> list:
+    """Chunk boundaries: contiguous vertex ranges with ~equal arc counts.
+    Returns ``B + 1`` vertex ids; chunk ``b`` covers ``[bounds[b],
+    bounds[b+1])``. Shared by the arc-slab (composed) and ELL (fused
+    Pallas) chunk builders so both paths walk identical vertex ranges."""
+    n, m = g.n, g.m
+    B = max(1, min(num_chunks, max(1, n)))
+    target = (m + B - 1) // max(B, 1) if m else 1
+    bounds = [0]
+    for b in range(1, B):
+        v = int(np.searchsorted(g.indptr, b * target, side="left"))
+        bounds.append(min(max(v, bounds[-1]), n))
+    bounds.append(n)
+    return bounds
+
+
 def build_chunks(g: Graph, num_chunks: int, pad_shapes: bool = True) -> LPChunks:
     if g.total_eweight >= 2**31 or g.total_vweight >= 2**31:
         # a real error, not an assert: asserts vanish under ``python -O``
@@ -63,15 +79,9 @@ def build_chunks(g: Graph, num_chunks: int, pad_shapes: bool = True) -> LPChunks
             f"{g.total_eweight}) must be < 2^31 for the int32 jit path")
     n, m = g.n, g.m
     n_pad = _next_pow2(n) if pad_shapes else n
-    B = max(1, min(num_chunks, max(1, n)))
+    bounds = chunk_bounds(g, num_chunks)
+    B = len(bounds) - 1
     src = g.arc_tails().astype(np.int64)
-    # chunk boundaries: contiguous vertex ranges with ~equal arc counts
-    target = (m + B - 1) // max(B, 1) if m else 1
-    bounds = [0]
-    for b in range(1, B):
-        v = int(np.searchsorted(g.indptr, b * target, side="left"))
-        bounds.append(min(max(v, bounds[-1]), n))
-    bounds.append(n)
     m_pad = 1
     for b in range(B):
         a0, a1 = int(g.indptr[bounds[b]]), int(g.indptr[bounds[b + 1]])

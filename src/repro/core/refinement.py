@@ -105,11 +105,14 @@ def balance_and_refine(g: Graph,
                        parent: Optional[np.ndarray] = None,
                        num_iterations: int = 2,
                        num_chunks: int = 8,
-                       seed: int = 0) -> np.ndarray:
+                       seed: int = 0,
+                       kernel: str = "auto") -> np.ndarray:
     """Paper's BalanceAndRefine: restore feasibility, improve, re-restore."""
-    part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed)
+    part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed,
+                         kernel=kernel)
     part = lp_refine(g, part, l_max_vec, parent=parent,
                      num_iterations=num_iterations,
                      num_chunks=num_chunks, seed=seed)
-    part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed + 1)
+    part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed + 1,
+                         kernel=kernel)
     return part

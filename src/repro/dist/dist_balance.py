@@ -61,6 +61,9 @@ from jax.sharding import PartitionSpec as PS
 from ..core.balance import balance_gains, greedy_select
 from ..core.lp import I32_MAX
 from ..graphs.distribute import GraphShards
+from ..kernels import dispatch
+from ..kernels.bal_round import ops as bal_ops
+from ..kernels.bal_round.bal_round import greedy_pick
 from .collectives import all_gather_1d, all_to_all, halo_exchange
 from .compat import shard_map
 from .dist_lp import (_check_int32_weights, _check_weights_mode,
@@ -76,14 +79,20 @@ _POOL_RECORD_BYTES = 20
 
 @functools.lru_cache(maxsize=32)
 def _build_balance_round_fn(mesh, P, k, n, n_loc, n_ghost, top_m, use_grid,
-                            owner):
+                            owner, fused=False, interpret=True):
     kk = k + 1                    # sentinel block k
     S_k = owner_table_width(kk, P)
 
-    def per_pe(lab_loc, lab_ghost, bw_state, src, dst, w, vw_loc, lgid,
-               send_idx, recv_slot, offsets, l_max, salt):
+    def per_pe(*args):
+        if fused:
+            (lab_loc, lab_ghost, bw_state, ell_idx, ell_w, vw_loc, lgid,
+             send_idx, recv_slot, offsets, l_max, salt) = args
+            ell_idx, ell_w = ell_idx[0], ell_w[0]
+        else:
+            (lab_loc, lab_ghost, bw_state, src, dst, w, vw_loc, lgid,
+             send_idx, recv_slot, offsets, l_max, salt) = args
+            src, dst, w = src[0], dst[0], w[0]
         lab_loc, lab_ghost, bw_state = lab_loc[0], lab_ghost[0], bw_state[0]
-        src, dst, w = src[0], dst[0], w[0]
         vw_loc, lgid = vw_loc[0], lgid[0]
         send_idx, recv_slot = send_idx[0], recv_slot[0]
 
@@ -97,12 +106,18 @@ def _build_balance_round_fn(mesh, P, k, n, n_loc, n_ghost, top_m, use_grid,
         lab_src_tab = jnp.concatenate(
             [lab_loc, jnp.full((1,), k, jnp.int32)])
 
-        # per-shard gains with the shared host kernel
-        lab_dst = tab[dst]
-        s_src, s_lab, s_w = lax.sort((src, lab_dst, w), num_keys=2)
-        rel, tgt = balance_gains(lab_src_tab, s_src, s_lab, s_w, bw, l_max,
-                                 None, vw_pad, salt, n_loc,
-                                 valid=gid_pad < n, restricted=False)
+        # per-shard gains: shared host kernel (composed) or Pallas pair
+        if fused:
+            rel, tgt = bal_ops.fused_round_scores(
+                tab, lab_src_tab, bw, l_max, None, ell_idx, ell_w,
+                vw_pad, gid_pad < n, salt, restricted=False,
+                interpret=interpret)
+        else:
+            lab_dst = tab[dst]
+            s_src, s_lab, s_w = lax.sort((src, lab_dst, w), num_keys=2)
+            rel, tgt = balance_gains(lab_src_tab, s_src, s_lab, s_w, bw,
+                                     l_max, None, vw_pad, salt, n_loc,
+                                     valid=gid_pad < n, restricted=False)
 
         # local top-m pool -> gathered (P*top_m,) pool on every PE
         vals, vidx = lax.top_k(rel, top_m)
@@ -116,7 +131,12 @@ def _build_balance_round_fn(mesh, P, k, n, n_loc, n_ghost, top_m, use_grid,
         o_neg, o_gid, o_tgt, o_blk, o_w = lax.sort(
             (-pvals, pool[:, 0], pool[:, 1], pool[:, 2], pool[:, 3]),
             num_keys=2)
-        accept, bw = greedy_select(-o_neg, o_tgt, o_blk, o_w, bw, l_max)
+        if fused:
+            accept, bw = greedy_pick(-o_neg, o_tgt, o_blk, o_w, bw, l_max,
+                                     interpret=interpret)
+        else:
+            accept, bw = greedy_select(-o_neg, o_tgt, o_blk, o_w, bw,
+                                       l_max)
 
         # apply accepted moves to the locally-owned vertices
         pid = lax.axis_index("pe")
@@ -137,9 +157,10 @@ def _build_balance_round_fn(mesh, P, k, n, n_loc, n_ghost, top_m, use_grid,
 
     pe = PS("pe")
     rep = PS()
+    n_pe = 9 if fused else 10
     fn = shard_map(per_pe, mesh=mesh,
-                   in_specs=(pe,) * 10 + (rep, rep, rep),
-                   out_specs=(pe, pe, pe, pe))
+                   in_specs=(pe,) * n_pe + (rep, rep, rep),
+                   out_specs=(pe, pe, pe, pe), check_rep=not fused)
     return jax.jit(fn)
 
 
@@ -152,6 +173,7 @@ def dist_rebalance(shards: GraphShards,
                    use_grid: bool = True,
                    mesh=None,
                    weights: str = "replicated",
+                   kernel: str = "auto",
                    stats: Optional[Dict] = None) -> np.ndarray:
     """Distributed exact balancer: rounds of pooled greedy moves until
     every block fits its budget.
@@ -161,8 +183,10 @@ def dist_rebalance(shards: GraphShards,
     early-return); at P>1 each PE contributes its own ``top_m``
     candidates per round, so a round can apply up to ``P * top_m``
     moves. ``weights`` picks the block-table layout (module docstring);
-    both produce bit-identical labels. ``stats``, when given, receives
-    ``rounds`` / ``pool_bytes`` / ``halo_bytes`` / ``time_s``.
+    both produce bit-identical labels, as does ``kernel="fused"`` (the
+    ``kernels.bal_round`` Pallas pair; falls back to composed when the
+    per-PE ELL slab exceeds the VMEM budget). ``stats``, when given,
+    receives ``rounds`` / ``pool_bytes`` / ``halo_bytes`` / ``time_s``.
     """
     P, n = shards.P, shards.n
     owner = _check_weights_mode(weights)
@@ -202,16 +226,24 @@ def dist_rebalance(shards: GraphShards,
     lab_loc = part_pad[np.minimum(shards.local_gid, n)].astype(np.int32)
     lab_ghost = part_pad[np.minimum(shards.ghost_gid, n)].astype(np.int32)
 
+    fused = dispatch.resolve_kernel_mode(kernel) == "fused"
+    if fused:
+        ell_idx, ell_w = bal_ops.build_balance_ell_dist(shards)
+        if not bal_ops.balance_ell_fits(ell_idx.shape[1],
+                                        ell_idx.shape[2]):
+            fused = False
     fn = _build_balance_round_fn(mesh, P, k, n, shards.n_loc,
                                  shards.n_ghost, top_m_loc, use_grid,
-                                 owner)
+                                 owner, fused=fused,
+                                 interpret=dispatch.kernel_interpret())
     lab_loc = jnp.asarray(lab_loc)
     lab_ghost = jnp.asarray(lab_ghost)
     bw_state = jnp.asarray(bw_state)
-    graph_args = (jnp.asarray(shards.arc_src),
-                  jnp.asarray(shards.arc_dst_idx),
-                  jnp.asarray(shards.arc_w),
-                  jnp.asarray(shards.vweights),
+    slab_args = (jnp.asarray(ell_idx), jnp.asarray(ell_w)) if fused else \
+        (jnp.asarray(shards.arc_src),
+         jnp.asarray(shards.arc_dst_idx),
+         jnp.asarray(shards.arc_w))
+    graph_args = slab_args + (jnp.asarray(shards.vweights),
                   jnp.asarray(shards.local_gid),
                   jnp.asarray(shards.send_idx),
                   jnp.asarray(shards.recv_slot),

@@ -43,6 +43,8 @@ from ..core.contraction import dedup_arcs
 from ..core.lp import I32_MAX
 from ..graphs.distribute import GraphShards, assemble_shards
 from ..graphs.format import Graph, from_coo
+from ..kernels import dispatch
+from ..kernels.seg_merge.seg_merge import seg_merge, seg_merge_vmem_bytes
 from .collectives import exchange_segments
 from .compat import shard_map
 from .dist_lp import _check_int32_weights, _resolve_mesh
@@ -72,10 +74,12 @@ def _next_pow2(x: int) -> int:
 
 
 @functools.lru_cache(maxsize=32)
-def _build_exchange_fn(mesh, P: int, S_e: int, use_grid: bool):
+def _build_exchange_fn(mesh, P: int, S_e: int, use_grid: bool,
+                       fused: bool = False, interpret: bool = True):
     """Jitted program: segmented all-to-all of (src, dst, w) coarse-arc
     records followed by the owner-side duplicate merge (sort by arc key,
-    segment-sum the weights)."""
+    segment-sum the weights — or the fused seg_merge Pallas kernel,
+    bit-identical)."""
     L = P * S_e
 
     def per_pe(slab, counts):
@@ -87,6 +91,11 @@ def _build_exchange_fn(mesh, P: int, S_e: int, use_grid: bool):
         src = jnp.where(valid, recv[:, :, 0], I32_MAX).reshape(L)
         dst = jnp.where(valid, recv[:, :, 1], I32_MAX).reshape(L)
         w = jnp.where(valid, recv[:, :, 2], 0).reshape(L)
+        if fused:
+            s_src, s_dst, tot, first32 = seg_merge(src, dst, w,
+                                                   interpret=interpret)
+            return (s_src[None], s_dst[None], tot[None],
+                    (first32 != 0)[None])
         s_src, s_dst, s_w = lax.sort((src, dst, w), num_keys=2)
         first = jnp.concatenate([
             jnp.ones((1,), jnp.bool_),
@@ -99,7 +108,7 @@ def _build_exchange_fn(mesh, P: int, S_e: int, use_grid: bool):
 
     pe = PS("pe")
     fn = shard_map(per_pe, mesh=mesh, in_specs=(pe, pe),
-                   out_specs=(pe, pe, pe, pe))
+                   out_specs=(pe, pe, pe, pe), check_rep=not fused)
     return jax.jit(fn)
 
 
@@ -113,7 +122,8 @@ def _global_vweights(shards: GraphShards) -> np.ndarray:
 def dist_contract(shards: GraphShards,
                   labels: np.ndarray,
                   use_grid: bool = False,
-                  mesh=None) -> DistContraction:
+                  mesh=None,
+                  kernel: str = "auto") -> DistContraction:
     """Contract clustering ``labels`` over graph shards without gathering
     the fine graph. Returns the coarse graph both as shards (fed straight
     into the next level's distributed clustering) and as a host view
@@ -142,6 +152,7 @@ def dist_contract(shards: GraphShards,
     np.add.at(cvw, mapping, _global_vweights(shards))
 
     # ---- per-PE local pre-contraction (shared sequential kernel) -------
+    kmode = dispatch.resolve_kernel_mode(kernel)
     t0 = time.perf_counter()
     pre_parts = []
     seg_counts = np.zeros((P, P), dtype=np.int32)
@@ -151,7 +162,8 @@ def dist_contract(shards: GraphShards,
         tab_g = np.concatenate([shards.local_gid[p], shards.ghost_gid[p]])
         dst_g = tab_g[shards.arc_dst_idx[p][valid]]
         cs, cd, cw = dedup_arcs(mapping[src_g], mapping[dst_g],
-                                shards.arc_w[p][valid].astype(np.int64))
+                                shards.arc_w[p][valid].astype(np.int64),
+                                kernel=kmode)
         # dedup_arcs sorts by coarse tail; owner ranges are contiguous in
         # coarse-id space, so destination segments are already contiguous
         dest = np.searchsorted(coff, cs, side="right") - 1
@@ -172,7 +184,10 @@ def dist_contract(shards: GraphShards,
             slab[p, q, :s1 - s0, 1] = cd[s0:s1]
             slab[p, q, :s1 - s0, 2] = cw[s0:s1]
     t0 = time.perf_counter()
-    fn = _build_exchange_fn(mesh, P, S_e, use_grid)
+    fused = (kmode == "fused" and
+             seg_merge_vmem_bytes(P * S_e) <= dispatch.VMEM_BUDGET_BYTES)
+    fn = _build_exchange_fn(mesh, P, S_e, use_grid, fused=fused,
+                            interpret=dispatch.kernel_interpret())
     s_src, s_dst, wsum, first = (np.asarray(x) for x in fn(
         jnp.asarray(slab), jnp.asarray(seg_counts)))
     exchange_s = time.perf_counter() - t0

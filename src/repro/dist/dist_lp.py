@@ -48,6 +48,9 @@ from jax.sharding import Mesh, PartitionSpec as PS
 from ..core.lp import (I32_MAX, _argmax_target, _group_conns, _hash32,
                        _own_connection)
 from ..graphs.distribute import GraphShards, chunk_local_arcs
+from ..kernels import dispatch
+from ..kernels.lp_move import ops as move_ops
+from ..kernels.lp_move.lp_move import lp_move_chunk, lp_move_vmem_bytes
 from .collectives import all_gather_1d, halo_exchange, psum_scatter_1d
 from .compat import shard_map
 
@@ -221,22 +224,52 @@ def _bounce_back_owner(move, tgt, lab_cur, vw_pad, cw_own, budget_own, L,
     return move & ~bounce, cw_own
 
 
+def _fused_chunk_move(lab_src_tab, tab, cw, bud, vw_pad, c_idx, c_w, v0,
+                      salt, n_loc, W, interpret):
+    """Fused twin of ``_local_moves`` + ``_intra_pe_revert``: gather the
+    chunk's ELL operands from the live tables and run the Pallas move
+    kernel (diff-form admission, same salts/hash order — bit-identical).
+    Returns ``(move, tgt)`` over the (n_loc+1,) src space."""
+    R, _ = c_idx.shape
+    rows = v0 + jnp.arange(R, dtype=jnp.int32)
+    own = lab_src_tab[rows][:, None]         # clamp-gather: dup rows inert
+    vwr = vw_pad[rows][:, None]
+    valid = c_idx >= 0
+    nlab = jnp.where(valid, tab[jnp.where(valid, c_idx, 0)], -1)
+    safe_lab = jnp.where(valid, nlab, 0)
+    ncw = jnp.where(valid, cw[safe_lab], I32_MAX)
+    nbud = jnp.where(valid, bud[safe_lab], 0)
+    scal = jnp.concatenate([
+        jnp.reshape(W.astype(jnp.int32), (1, 1)),
+        jnp.reshape(v0.astype(jnp.int32), (1, 1))], axis=1)
+    moved, tgt = lp_move_chunk(nlab, c_w, ncw, own, vwr, scal,
+                               jnp.reshape(salt, (1, 1)), nbud=nbud,
+                               fit_sum=False, row_tile=move_ops.ROW_TILE,
+                               interpret=interpret)
+    move = jnp.zeros((n_loc + 1,), jnp.bool_).at[rows].set(
+        moved[:, 0] != 0, mode="drop")
+    tgt_full = lab_src_tab.at[rows].set(tgt[:, 0], mode="drop")
+    return move, tgt_full
+
+
 # ---------------------------------------------------------------------------
 # distributed clustering
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=32)
 def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
-                      use_grid, owner=False):
+                      use_grid, owner=False, fused=False, interpret=True):
     num_labels = n + 1           # label values are global vertex ids
     S_w = owner_table_width(num_labels, P)
     # owner mode pads the dense *transient* view so P shards tile it;
     # only the (S_w,) shard persists across chunks
     L = P * S_w if owner else num_labels
 
-    def per_pe(src, dst, w, vw_loc, lgid, ggid, send_idx, recv_slot,
-               salts, W):
-        src, dst, w = src[0], dst[0], w[0]
+    def per_pe(slab_a, slab_b, slab_c, vw_loc, lgid, ggid, send_idx,
+               recv_slot, salts, W):
+        # slabs are (src, dst, w) arc chunks, or (idx, w, v0) ELL chunks
+        # when the fused Pallas move kernel is active
+        slab_a, slab_b, slab_c = slab_a[0], slab_b[0], slab_c[0]
         vw_loc, lgid, ggid = vw_loc[0], lgid[0], ggid[0]
         send_idx, recv_slot = send_idx[0], recv_slot[0]
         vw_pad = jnp.concatenate([vw_loc, jnp.zeros((1,), jnp.int32)])
@@ -259,7 +292,6 @@ def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
 
         def chunk_body(carry, xs):
             lab_loc, lab_ghost, cw_state = carry
-            c_src, c_dst, c_w, salt = xs
             # owner mode: request current weights from the owners (the
             # dense views live only inside this chunk body)
             if owner:
@@ -271,16 +303,24 @@ def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
                 [lab_loc, lab_ghost, jnp.full((1,), n, jnp.int32)])
             lab_src_tab = jnp.concatenate(
                 [lab_loc, jnp.full((1,), n, jnp.int32)])
-            move, tgt, lab_cur = _local_moves(
-                lab_src_tab, tab, cw, bud, vw_pad, c_src, c_dst, c_w,
-                salt, n_loc, cluster_mode=True)
-            vw_m = jnp.where(move, vw_pad, 0)
-            d_in = jnp.zeros((L,), jnp.int32).at[tgt].add(
-                vw_m, mode="drop")
-            d_out = jnp.zeros((L,), jnp.int32).at[lab_cur].add(
-                vw_m, mode="drop")
-            move = _intra_pe_revert(move, tgt, lab_cur, vw_pad, cw,
-                                    d_in, d_out, salt, n_loc, L, W)
+            if fused:
+                c_idx, c_w, v0, salt = xs
+                move, tgt = _fused_chunk_move(
+                    lab_src_tab, tab, cw, bud, vw_pad, c_idx, c_w, v0,
+                    salt, n_loc, W, interpret)
+                lab_cur = lab_src_tab
+            else:
+                c_src, c_dst, c_w, salt = xs
+                move, tgt, lab_cur = _local_moves(
+                    lab_src_tab, tab, cw, bud, vw_pad, c_src, c_dst, c_w,
+                    salt, n_loc, cluster_mode=True)
+                vw_m = jnp.where(move, vw_pad, 0)
+                d_in = jnp.zeros((L,), jnp.int32).at[tgt].add(
+                    vw_m, mode="drop")
+                d_out = jnp.zeros((L,), jnp.int32).at[lab_cur].add(
+                    vw_m, mode="drop")
+                move = _intra_pe_revert(move, tgt, lab_cur, vw_pad, cw,
+                                        d_in, d_out, salt, n_loc, L, W)
             if owner:
                 cw_state = _commit_to_owners(move, tgt, lab_cur, vw_pad,
                                              cw_state, L, P, use_grid)
@@ -300,14 +340,15 @@ def _build_cluster_fn(mesh, P, n, n_loc, n_ghost, B, num_iterations,
         for it in range(num_iterations):
             (lab_loc, lab_ghost, cw_state), _ = lax.scan(
                 chunk_body, (lab_loc, lab_ghost, cw_state),
-                (src, dst, w, salts[it]))
+                (slab_a, slab_b, slab_c, salts[it]))
         return lab_loc[None]
 
     pe = PS("pe")
     rep = PS()
+    # check_rep: pallas_call has no replication rule under shard_map
     fn = shard_map(per_pe, mesh=mesh,
                    in_specs=(pe, pe, pe, pe, pe, pe, pe, pe, rep, rep),
-                   out_specs=pe)
+                   out_specs=pe, check_rep=not fused)
     return jax.jit(fn)
 
 
@@ -318,26 +359,42 @@ def dist_cluster(shards: GraphShards,
                  seed: int = 0,
                  use_grid: bool = True,
                  mesh: Mesh = None,
-                 weights: str = "replicated") -> np.ndarray:
+                 weights: str = "replicated",
+                 kernel: str = "auto") -> np.ndarray:
     """Distributed size-constrained LP clustering over graph shards.
 
     Returns (n,) int64 global cluster labels (label values are vertex
     ids). Cluster weights respect ``max_cluster_weight`` up to cross-PE
     race tolerance; callers contract only after exact host-side
-    enforcement. ``weights`` picks the table layout (module docstring);
-    both layouts return bit-identical labels.
+    enforcement. ``weights`` picks the table layout (module docstring)
+    and ``kernel`` the chunk-move implementation (``kernels.dispatch``);
+    every combination returns bit-identical labels.
     """
     P, n = shards.P, shards.n
     owner = _check_weights_mode(weights)
     _check_int32_weights(shards)
     mesh = _resolve_mesh(mesh, P)
-    srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
-    B = srcs.shape[1]
+    fused = dispatch.resolve_kernel_mode(kernel) == "fused"
+    if fused:
+        idx, ws_ell, v0s = move_ops.build_move_chunks_dist(
+            shards, num_chunks)
+        _, B, R, D = idx.shape
+        if lp_move_vmem_bytes(R, D, move_ops.ROW_TILE,
+                              fit_sum=False) > dispatch.VMEM_BUDGET_BYTES:
+            fused = False
+        else:
+            slabs = (jnp.asarray(idx), jnp.asarray(ws_ell),
+                     jnp.asarray(v0s))
+    if not fused:
+        srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
+        B = srcs.shape[1]
+        slabs = (jnp.asarray(srcs), jnp.asarray(dsts), jnp.asarray(ws))
     fn = _build_cluster_fn(mesh, P, n, shards.n_loc, shards.n_ghost, B,
-                           num_iterations, use_grid, owner)
+                           num_iterations, use_grid, owner, fused=fused,
+                           interpret=dispatch.kernel_interpret())
     salts = (np.arange(num_iterations * B, dtype=np.uint64).reshape(
         num_iterations, B) * 0x85EBCA6B + seed * 1000003) % (2**32)
-    lab = fn(jnp.asarray(srcs), jnp.asarray(dsts), jnp.asarray(ws),
+    lab = fn(*slabs,
              jnp.asarray(shards.vweights), jnp.asarray(shards.local_gid),
              jnp.asarray(shards.ghost_gid), jnp.asarray(shards.send_idx),
              jnp.asarray(shards.recv_slot),

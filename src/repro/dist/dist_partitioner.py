@@ -53,6 +53,7 @@ def dist_refine_and_balance(g: Graph,
                             shards: Optional[GraphShards] = None,
                             weights: str = "replicated",
                             balance: str = "host",
+                            kernel: str = "auto",
                             balance_stats: Optional[Dict] = None
                             ) -> np.ndarray:
     """Distributed BalanceAndRefine: sharded LP refinement (block weights
@@ -78,9 +79,10 @@ def dist_refine_and_balance(g: Graph,
     if balance == "dist":
         part = dist_rebalance(shards, part, l_max_vec, seed=seed + 1,
                               use_grid=use_grid, mesh=mesh,
-                              weights=weights, stats=balance_stats)
+                              weights=weights, kernel=kernel,
+                              stats=balance_stats)
     else:
-        part = rebalance(g, part, l_max_vec, seed=seed + 1,
+        part = rebalance(g, part, l_max_vec, seed=seed + 1, kernel=kernel,
                          stats=balance_stats)
     return part
 
@@ -128,7 +130,8 @@ def dist_partition_impl(g: Graph,
                               num_iterations=cfg.cluster_iterations,
                               num_chunks=cfg.num_chunks,
                               seed=cfg.seed + level, use_grid=use_grid,
-                              mesh=mesh, weights=cfg.weights)
+                              mesh=mesh, weights=cfg.weights,
+                              kernel=cfg.kernel)
         if cfg.balance == "dist":
             # coarsening-side balancing stays sharded: the exact
             # eject-to-singleton sweep runs owner-side instead of
@@ -140,11 +143,11 @@ def dist_partition_impl(g: Graph,
                                              np.asarray(G.vweights), W)
         if cfg.contraction == "sharded":
             res = dist_contract(shards, labels, use_grid=use_grid,
-                                mesh=mesh)
+                                mesh=mesh, kernel=cfg.kernel)
             Gc, mapping, next_shards = res.graph, res.mapping, res.shards
             cstats = res.stats
         else:
-            Gc, mapping = contract(G, labels)
+            Gc, mapping = contract(G, labels, kernel=cfg.kernel)
             next_shards, cstats = None, None
         if Gc.n >= G.n * cfg.min_shrink:
             # converged — coarsest distributed level reached; record the
@@ -180,7 +183,7 @@ def dist_partition_impl(g: Graph,
             num_chunks=cfg.num_chunks,
             seed=lvl_seed, use_grid=use_grid, mesh=mesh,
             shards=fshards, weights=cfg.weights, balance=cfg.balance,
-            balance_stats=bal_stats)
+            kernel=cfg.kernel, balance_stats=bal_stats)
         if trace is not None:
             trace_event(trace, phase="dist-uncoarsen", level=lvl, n=Gf.n,
                         m=Gf.m, blocks=k, P=P, seed=lvl_seed,

@@ -1,0 +1,68 @@
+"""Composed-XLA oracle for the balance-round kernels.
+
+Whole-array jnp mirrors of ``bal_round._scores_kernel`` /
+``bal_round._pick_kernel`` (no Pallas): the property tests check the
+kernels against these, and these against ``core.balance.balance_gains``
+/ ``greedy_select`` on the equivalent sorted-slab inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bal_round import I32_MAX, NEG_INF
+from ..lp_move.lp_move import _h32
+
+
+def bal_scores_ref(nlab, nw, nbw, nlm, own, vw, ovr, vld, fb_t, fb_ok,
+                   salt, npar=None, opar=None, *, restricted=False):
+    """Reference ``(rel, tgt)`` for the ELL balance-scores inputs."""
+    validn = nlab >= 0
+    ok = (nbw <= (nlm - vw)) & (nlab != own) & validn
+    if restricted:
+        ok &= npar == opar
+    eq = nlab[:, :, None] == nlab[:, None, :]
+    conn = jnp.sum(jnp.where(eq, nw[:, :, None], 0), axis=1)
+    score = jnp.where(ok, conn, -1)
+    best = jnp.max(score, axis=1, keepdims=True)
+    is_best = score == best
+    light = jnp.min(jnp.where(is_best, nbw, I32_MAX), axis=1,
+                    keepdims=True)
+    is_best &= nbw == light
+    h = _h32(nlab, salt[0, 0])
+    hbest = jnp.min(jnp.where(is_best, h, I32_MAX), axis=1, keepdims=True)
+    is_best &= h == hbest
+    tgt_adj = jnp.min(jnp.where(is_best, nlab, I32_MAX), axis=1,
+                      keepdims=True)
+    own_conn = jnp.sum(jnp.where((nlab == own) & validn, nw, 0), axis=1,
+                       keepdims=True)
+    has_adj = best >= 0
+    g = jnp.where(has_adj, best - own_conn, -own_conn)
+    tgt = jnp.where(has_adj, tgt_adj, fb_t)
+    movable = (ovr != 0) & (has_adj | (fb_ok != 0)) & (vld != 0)
+    gf = g.astype(jnp.float32)
+    cv = jnp.maximum(vw.astype(jnp.float32), 1.0)
+    rel = jnp.where(g >= 0, gf * cv, gf / cv)
+    return jnp.where(movable, rel, NEG_INF), tgt
+
+
+def greedy_pick_ref(vals, tgt_blk, src_blk, cand_w, block_w, l_max):
+    """Reference greedy pool application — the ``core.balance``
+    ``greedy_select`` loop, restated here to keep this module import-free
+    of ``core`` (which itself dispatches into this package)."""
+    m = vals.shape[0]
+
+    def body(i, carry):
+        block_w, accept = carry
+        t, b, cw = tgt_blk[i], src_blk[i], cand_w[i]
+        ok = (vals[i] > NEG_INF) & (block_w[b] > l_max[b]) & \
+             (block_w[t] <= l_max[t] - cw) & (t != b)
+        cwd = jnp.where(ok, cw, 0)
+        block_w = block_w.at[b].add(-cwd).at[t].add(cwd)
+        accept = accept.at[i].set(ok)
+        return block_w, accept
+
+    block_w, accept = jax.lax.fori_loop(
+        0, m, body, (block_w, jnp.zeros((m,), jnp.bool_)))
+    return accept, block_w

@@ -1,0 +1,60 @@
+"""Kernel-mode resolution shared by the fused Pallas paths.
+
+The ``kernel`` knob on ``PartitionerConfig`` selects the implementation
+of the three fused hot loops (docs/KERNELS.md):
+
+  * ``"composed"`` — the original XLA-composed pipelines (sort +
+    segment ops). Always available; the reference the fused kernels are
+    bit-identical to.
+  * ``"fused"``    — single-pass Pallas kernels (lp_move, seg_merge,
+    balance_round). On TPU they compile to Mosaic; off-TPU they run in
+    ``interpret=True`` mode, which is correct but slow — useful only to
+    exercise the fused code path in tests/CI.
+  * ``"auto"``     — per-backend default: "fused" on TPU, "composed"
+    anywhere else.
+
+Fused wrappers also fall back to the composed path per call site when a
+shape exceeds the kernel's VMEM budget (see ``fits_vmem``); the fallback
+is safe because both paths are bit-identical by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+KERNEL_MODES = ("auto", "fused", "composed")
+
+# single-core VMEM working-set budget the fused wrappers plan against
+# (v5e has ~16 MiB more than half of which we leave to Mosaic)
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+
+def check_kernel_mode(kernel: str) -> str:
+    if kernel not in KERNEL_MODES:
+        raise ValueError(f"unknown kernel mode {kernel!r}; expected one "
+                         f"of {KERNEL_MODES}")
+    return kernel
+
+
+@functools.lru_cache(maxsize=1)
+def _default_backend_is_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def resolve_kernel_mode(kernel: str) -> str:
+    """Map the config knob to a concrete mode ("fused" | "composed")."""
+    check_kernel_mode(kernel)
+    if kernel == "auto":
+        return "fused" if _default_backend_is_tpu() else "composed"
+    return kernel
+
+
+def kernel_interpret() -> bool:
+    """Whether fused kernels must run in Pallas interpret mode (no TPU)."""
+    return not _default_backend_is_tpu()
+
+
+def fits_vmem(*arrays_bytes: int, budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Whole-chunk kernels keep every operand resident in VMEM; callers
+    sum their operand footprints and fall back to composed beyond this."""
+    return sum(arrays_bytes) <= budget

@@ -1,0 +1,206 @@
+"""Host-side ELL construction + jitted driver for the fused LP move kernel.
+
+The composed clustering path feeds ``core.lp.cluster_iteration`` padded
+*arc slabs* (B, m_pad). The fused kernel wants the same chunks in ELL
+form — one row per chunk vertex, D padded neighbor lanes — so the gain
+matrix is a dense per-row contraction instead of a sorted segment scan.
+Chunk vertex ranges come from ``core.lp.chunk_bounds``: identical ranges
+and the identical per-chunk salt stream keep the fused iteration
+bit-identical to the composed one.
+
+Gathers of neighbor labels / cluster weights stay in XLA *inside the
+same jit program* as the kernel (they are memory-bound shuffles XLA
+already emits optimally); only the arithmetic-dense move step runs in
+Pallas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lp_move import I32_MAX, lp_move_chunk, lp_move_vmem_bytes
+from ..dispatch import VMEM_BUDGET_BYTES
+
+LANE = 128          # ELL neighbor lanes padded to the TPU lane width
+ROW_TILE = 8        # sublane tile walked by the kernel's fori loops
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveChunks:
+    """Padded per-chunk ELL slabs for the fused LP move kernel.
+
+    Row ``r`` of chunk ``b`` is vertex ``v0[b] + r``; rows beyond the
+    chunk's true vertex range (and neighbor lanes beyond a vertex's
+    degree) carry sentinel ``idx = -1`` / ``w = 0`` and can never move.
+    """
+    idx: np.ndarray   # (B, R, D) int32 neighbor vertex ids, -1 padding
+    w: np.ndarray     # (B, R, D) int32 arc weights, 0 padding
+    v0: np.ndarray    # (B,) int32 first vertex id of each chunk
+    n: int            # true vertex count
+    n_pad: int        # padded vertex count == composed sentinel id
+    num_chunks: int
+
+    @property
+    def shape(self):
+        return self.idx.shape
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1)).bit_length()
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((max(x, 1) + mult - 1) // mult) * mult
+
+
+def ell_from_csr(indptr: np.ndarray, adjncy: np.ndarray,
+                 eweights: np.ndarray, D: int):
+    """Dense (n, D) neighbor-id / weight tables from CSR; -1 / 0 padding."""
+    n = indptr.shape[0] - 1
+    deg = np.diff(indptr)
+    idx = np.full((n, D), -1, dtype=np.int32)
+    w = np.zeros((n, D), dtype=np.int32)
+    if adjncy.shape[0]:
+        rows = np.repeat(np.arange(n), deg)
+        pos = np.arange(adjncy.shape[0]) - np.repeat(indptr[:-1], deg)
+        idx[rows, pos] = adjncy
+        w[rows, pos] = eweights
+    return idx, w
+
+
+def build_move_chunks(g, num_chunks: int) -> MoveChunks:
+    """ELL twin of ``core.lp.build_chunks`` (same bounds, same padding
+    bucket policy: pow-2 rows, lane-multiple neighbor width)."""
+    from ...core import lp
+
+    if g.total_eweight >= 2**31 or g.total_vweight >= 2**31:
+        raise ValueError(
+            f"build_move_chunks: total vertex/edge weight "
+            f"({g.total_vweight}/{g.total_eweight}) must be < 2^31")
+    n = g.n
+    n_pad = _next_pow2(n)
+    bounds = lp.chunk_bounds(g, num_chunks)
+    B = len(bounds) - 1
+    deg = np.diff(g.indptr)
+    D = _round_up(int(deg.max()) if deg.size else 1, LANE)
+    R = _round_up(_next_pow2(max(
+        bounds[b + 1] - bounds[b] for b in range(B))), ROW_TILE)
+    idx_full, w_full = ell_from_csr(np.asarray(g.indptr),
+                                    np.asarray(g.adjncy, dtype=np.int64),
+                                    np.asarray(g.eweights), D)
+    idx = np.full((B, R, D), -1, dtype=np.int32)
+    w = np.zeros((B, R, D), dtype=np.int32)
+    for b in range(B):
+        r0, r1 = bounds[b], bounds[b + 1]
+        idx[b, :r1 - r0] = idx_full[r0:r1]
+        w[b, :r1 - r0] = w_full[r0:r1]
+    return MoveChunks(idx=idx, w=w,
+                      v0=np.asarray(bounds[:-1], dtype=np.int32),
+                      n=n, n_pad=n_pad, num_chunks=B)
+
+
+def move_chunks_fit_vmem(chunks: MoveChunks) -> bool:
+    _, R, D = chunks.shape
+    return lp_move_vmem_bytes(R, D, ROW_TILE) <= VMEM_BUDGET_BYTES
+
+
+def build_move_chunks_dist(shards, num_chunks: int):
+    """ELL twin of ``graphs.distribute.chunk_local_arcs``: per-(PE, chunk)
+    slabs of the PE's local vertices with neighbor lanes holding *dst
+    table indices* (labels are gathered jit-side from the live halo
+    table). Sentinel arcs (src == n_loc) are dropped — the sentinel row
+    must never move, which the kernel guarantees for arc-less rows.
+
+    Returns ``(idx, w, v0)`` with shapes (P, B, R, D), (P, B, R, D),
+    (P, B); row ``r`` of slab (p, b) is local vertex ``v0[p, b] + r``.
+    """
+    from ...graphs.distribute import chunk_local_arcs
+
+    srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
+    P, B, _ = srcs.shape
+    n_loc = shards.n_loc
+    R_true = 1
+    D_true = 1
+    spans = np.zeros((P, B, 2), dtype=np.int64)
+    for p in range(P):
+        for b in range(B):
+            sv = srcs[p, b]
+            real = sv < n_loc
+            if real.any():
+                v0, v1 = int(sv[real].min()), int(sv[real].max()) + 1
+                spans[p, b] = (v0, v1)
+                R_true = max(R_true, v1 - v0)
+                D_true = max(D_true, int(np.bincount(sv[real]).max()))
+    R = _round_up(_next_pow2(R_true), ROW_TILE)
+    D = _round_up(D_true, LANE)
+    idx = np.full((P, B, R, D), -1, dtype=np.int32)
+    w = np.zeros((P, B, R, D), dtype=np.int32)
+    for p in range(P):
+        for b in range(B):
+            sv = srcs[p, b]
+            real = sv < n_loc
+            if not real.any():
+                continue
+            v0 = spans[p, b, 0]
+            rows = (sv[real] - v0).astype(np.int64)
+            # arcs are src-sorted, so lanes are positions within the run
+            pos = np.arange(rows.shape[0]) - np.searchsorted(
+                rows, rows, side="left")
+            idx[p, b, rows, pos] = dsts[p, b, real]
+            w[p, b, rows, pos] = ws[p, b, real]
+    return idx, w, spans[:, :, 0].astype(np.int32)
+
+
+def _chunk_step(labels, cluster_w, c_idx, c_w, v0, salt, vweights, W, R,
+                interpret):
+    """Gather ELL operands, run the kernel, apply the chunk's moves."""
+    rows = v0 + jnp.arange(R, dtype=jnp.int32)
+    own = labels[rows][:, None]              # clamp-gather: dup rows inert
+    vwr = vweights[rows][:, None]
+    valid = c_idx >= 0
+    nlab = jnp.where(valid, labels[jnp.where(valid, c_idx, 0)], -1)
+    ncw = jnp.where(valid, cluster_w[jnp.where(valid, nlab, 0)], I32_MAX)
+    scal = jnp.concatenate([
+        jnp.reshape(W.astype(jnp.int32), (1, 1)),
+        jnp.reshape(v0.astype(jnp.int32), (1, 1))], axis=1)
+    moved, tgt = lp_move_chunk(nlab, c_w, ncw, own, vwr, scal,
+                               jnp.reshape(salt, (1, 1)),
+                               fit_sum=True, row_tile=ROW_TILE,
+                               interpret=interpret)
+    mrow = moved[:, 0] != 0
+    trow = tgt[:, 0]
+    orow = own[:, 0]
+    new_rows = jnp.where(mrow, trow, orow)
+    # rows past the label table are clamp-gathered dupes: drop their writes
+    labels = labels.at[rows].set(new_rows, mode="drop")
+    vwm = jnp.where(mrow, vwr[:, 0], 0)
+    cluster_w = cluster_w.at[trow].add(vwm, mode="drop") \
+                         .at[orow].add(-vwm, mode="drop")
+    return labels, cluster_w
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def cluster_iteration_fused(labels, cluster_w, chunks_idx, chunks_w, v0s,
+                            vweights, max_cluster_weight, seed, *, n,
+                            interpret=True):
+    """Fused twin of ``core.lp.cluster_iteration`` — same salt stream,
+    bit-identical (labels, cluster_w) trajectory."""
+    B, R, _ = chunks_idx.shape
+
+    def body(carry, xs):
+        labels, cluster_w = carry
+        c_idx, c_w, v0, salt = xs
+        labels, cluster_w = _chunk_step(
+            labels, cluster_w, c_idx, c_w, v0, salt, vweights,
+            max_cluster_weight, R, interpret)
+        return (labels, cluster_w), ()
+
+    salts = (jnp.arange(B, dtype=jnp.uint32) * np.uint32(0x85EBCA6B)
+             + seed.astype(jnp.uint32))
+    (labels, cluster_w), _ = jax.lax.scan(
+        body, (labels, cluster_w), (chunks_idx, chunks_w, v0s, salts))
+    return labels, cluster_w

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the fused LP move kernel.
+
+Whole-array XLA mirror of the kernel math (no Pallas, no tiling) over
+the same ELL operands — the property tests assert the kernel is
+bit-identical to this under padding edges; ``tests/test_fused_kernels.py``
+separately asserts the end-to-end fused iteration is bit-identical to
+the production composed path (``core.lp.cluster_iteration``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .lp_move import I32_MAX, _h32
+
+
+def lp_move_chunk_ref(nlab, nw, ncw, own, vw, scal, salt, nbud=None, *,
+                      fit_sum: bool = True):
+    """Reference ``(moved, tgt)`` for one ELL chunk; shapes as the kernel."""
+    R, _ = nlab.shape
+    W = scal[0, 0]
+    v0 = scal[0, 1]
+    s = salt[0, 0]
+    validn = nlab >= 0
+    staying = nlab == own
+    if fit_sum:
+        fits = ((ncw + vw) <= W) | staying
+    else:
+        fits = (ncw <= (nbud - vw)) | staying
+    fits = fits & validn
+    eq = nlab[:, :, None] == nlab[:, None, :]
+    conn = jnp.sum(jnp.where(eq, nw[:, :, None], 0), axis=1)
+    score = jnp.where(fits, conn, -1)
+    best = jnp.max(score, axis=1, keepdims=True)
+    is_best = score == best
+    wk = jnp.where(is_best, ncw, I32_MAX)
+    light = jnp.min(wk, axis=1, keepdims=True)
+    is_best &= ncw == light
+    h = _h32(nlab, s)
+    hk = jnp.where(is_best, h, I32_MAX)
+    hbest = jnp.min(hk, axis=1, keepdims=True)
+    is_best &= h == hbest
+    tgt = jnp.min(jnp.where(is_best, nlab, I32_MAX), axis=1, keepdims=True)
+    own_conn = jnp.sum(jnp.where(staying & validn, nw, 0), axis=1,
+                       keepdims=True)
+    mv = (best > own_conn) & (tgt != own) & (tgt < I32_MAX) & (best > 0)
+    tgt = jnp.where(mv, tgt, own)
+
+    tgt_u = jnp.reshape(tgt, (1, R))
+    own_u = jnp.reshape(own, (1, R))
+    vw_u = jnp.reshape(vw, (1, R))
+    mvw_u = jnp.where(jnp.reshape(mv, (1, R)), vw_u, 0)
+    same = tgt_u == tgt                               # (R, R)
+    d_in = jnp.sum(jnp.where(same, mvw_u, 0), axis=1, keepdims=True)
+    d_out = jnp.sum(jnp.where(own_u == tgt, mvw_u, 0), axis=1,
+                    keepdims=True)
+    new_cw = light + d_in - d_out
+    cand = mv & (new_cw > W)
+
+    salt2 = s ^ np.uint32(0x9E3779B9)
+    iota_u = lax.broadcasted_iota(jnp.int32, (1, R), 1)
+    iota_v = lax.broadcasted_iota(jnp.int32, (R, 1), 0)
+    rk_u = _h32(v0 + iota_u, salt2)
+    rk_v = _h32(v0 + iota_v, salt2)
+    cvw_u = jnp.where(jnp.reshape(cand, (1, R)), vw_u, 0)
+    moved_in = jnp.sum(jnp.where(same, cvw_u, 0), axis=1, keepdims=True)
+    prior = (rk_u < rk_v) | ((rk_u == rk_v) & (iota_u <= iota_v))
+    within = jnp.sum(jnp.where(same & prior, cvw_u, 0), axis=1,
+                     keepdims=True)
+    allowed = jnp.maximum(W - (new_cw - moved_in), 0)
+    revert = cand & (within > allowed)
+    moved = mv & ~revert
+    return moved.astype(jnp.int32), tgt

@@ -1,0 +1,24 @@
+"""Composed-XLA oracle for the seg_merge kernel.
+
+Exactly the owner-side merge block of
+``dist.dist_contraction._build_exchange_fn``: stable lexicographic
+``lax.sort`` + cumsum group ids + ``segment_sum``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def seg_merge_ref(src, dst, w):
+    """Reference ``(s_src, s_dst, tot, first)`` for (L,) int32 records."""
+    L = src.shape[0]
+    s_src, s_dst, s_w = lax.sort((src, dst, w), num_keys=2)
+    first = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_),
+        (s_src[1:] != s_src[:-1]) | (s_dst[1:] != s_dst[:-1])])
+    gid = jnp.cumsum(first.astype(jnp.int32)) - 1
+    tot = jax.ops.segment_sum(s_w, gid, num_segments=L,
+                              indices_are_sorted=True)
+    return s_src, s_dst, tot[gid], first.astype(jnp.int32)

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: segmented sort + duplicate-arc merge (paper §5).
+
+Contraction's inner loop deduplicates coarse arcs: sort (src, dst, w)
+records lexicographically by (src, dst), flag the first record of every
+equal-key run, and sum each run's weights. The composed path is a
+``lax.sort`` (or host lexsort) followed by a cumsum-based segment-sum —
+multiple passes over the record slab. This kernel keeps the whole slab
+resident in VMEM and does all three stages in one ``pallas_call``:
+
+  * **sort** — a bitonic network over the lane axis ((1, L) layout,
+    L a power of two). Each compare-exchange stage pairs lane ``i``
+    with ``i ^ j`` by reshaping the lanes to (L/2j, 2, j) and flipping
+    the middle axis (a static reverse — XLA compiles the unrolled
+    network orders of magnitude faster than the equivalent pair of
+    rolls); keys compare lexicographically on (src, dst), the weight
+    rides as payload. Bitonic networks are not stable, but equal keys
+    are exactly the records that merge, so every output of this kernel
+    is invariant to their order.
+  * **run flags** — ``first[i] = (i == 0) | key[i] != key[i-1]``.
+  * **run totals** — forward + backward segmented Hillis-Steele scans
+    (log L rounds each) give every lane its run's total weight:
+    ``tot = fwd_incl + bwd_incl - w``.
+
+Invalid records (self loops, padding beyond the true record count)
+carry key ``src = dst = I32_MAX`` / ``w = 0``: they sort to the tail and
+callers drop them with ``(s_src < I32_MAX) & first``.
+
+Outputs are bit-identical to the composed owner-side merge in
+``dist.dist_contraction._build_exchange_fn`` and to the host
+``core.contraction.dedup_arcs`` after that filter (int32 range).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+def _xchg(x, j, L):
+    """Value at partner lane ``i ^ j`` (j a power of two): flip the
+    middle axis of the (L/2j, 2, j) lane view."""
+    return jnp.flip(x.reshape(-1, 2, j), axis=1).reshape(1, L)
+
+
+def _shr(x, step):
+    """Lanes shifted right by ``step``, zero/False fill on the left."""
+    return jnp.pad(x[:, :-step], ((0, 0), (step, 0)))
+
+
+def _shl(x, step):
+    """Lanes shifted left by ``step``, zero/False fill on the right."""
+    return jnp.pad(x[:, step:], ((0, 0), (0, step)))
+
+
+def _kernel(src_ref, dst_ref, w_ref, osrc_ref, odst_ref, tot_ref,
+            first_ref, *, L):
+    s = src_ref[...]                                  # (1, L)
+    d = dst_ref[...]
+    w = w_ref[...]
+    iota = lax.broadcasted_iota(jnp.int32, (1, L), 1)
+
+    # ---- bitonic sort by (src, dst), w as payload -----------------------
+    k = 2
+    while k <= L:
+        j = k // 2
+        while j >= 1:
+            sp = _xchg(s, j, L)
+            dp = _xchg(d, j, L)
+            wp = _xchg(w, j, L)
+            lower = (iota & j) == 0
+            want_min = ((iota & k) == 0) == lower
+            gt = (s > sp) | ((s == sp) & (d > dp))
+            lt = (s < sp) | ((s == sp) & (d < dp))
+            take = jnp.where(want_min, gt, lt)
+            s = jnp.where(take, sp, s)
+            d = jnp.where(take, dp, d)
+            w = jnp.where(take, wp, w)
+            j //= 2
+        k *= 2
+
+    # ---- run-start flags (lane 0 is forced first, so the shifted-in
+    # zero on the left never matters) --------------------------------------
+    first = (iota == 0) | (s != _shr(s, 1)) | (d != _shr(d, 1))
+
+    # ---- run totals: forward + backward segmented scans ------------------
+    fsum, flag = w, first
+    step = 1
+    while step < L:
+        fsum = fsum + jnp.where(~flag, _shr(fsum, step), 0)
+        flag = flag | _shr(flag, step)
+        step *= 2
+    is_end = _shl(first, 1) | (iota == L - 1)
+    bsum, flag = w, is_end
+    step = 1
+    while step < L:
+        bsum = bsum + jnp.where(~flag, _shl(bsum, step), 0)
+        flag = flag | _shl(flag, step)
+        step *= 2
+
+    osrc_ref[...] = s
+    odst_ref[...] = d
+    tot_ref[...] = fsum + bsum - w
+    first_ref[...] = first.astype(jnp.int32)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def seg_merge(src, dst, w, *, interpret: bool = True):
+    """Sort + merge (L,) int32 arc records. Returns
+    ``(s_src, s_dst, tot, first)`` — sorted keys, per-lane run totals,
+    int32 run-start flags. Pads to a power of two internally (padding
+    carries the same I32_MAX invalid key callers already filter)."""
+    (L,) = src.shape
+    Lp = max(2, _next_pow2(L))
+    pad = Lp - L
+    if pad:
+        src = jnp.concatenate([src, jnp.full((pad,), I32_MAX, jnp.int32)])
+        dst = jnp.concatenate([dst, jnp.full((pad,), I32_MAX, jnp.int32)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), jnp.int32)])
+    out_shapes = tuple(jax.ShapeDtypeStruct((1, Lp), jnp.int32)
+                       for _ in range(4))
+    s_src, s_dst, tot, first = pl.pallas_call(
+        functools.partial(_kernel, L=Lp),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(src[None], dst[None], w[None])
+    return s_src[0, :L], s_dst[0, :L], tot[0, :L], first[0, :L]
+
+
+def seg_merge_vmem_bytes(L: int) -> int:
+    """Planning estimate: ~10 live (1, L) i32 lanesets during the sort
+    and scan stages (inputs, partners, flags, outputs)."""
+    return 10 * max(2, _next_pow2(L)) * 4

@@ -52,6 +52,11 @@ def main() -> int:
                          "level to the host (host) or run the pooled "
                          "greedy balancer over the level's shards (dist) "
                          "— docs/DIST.md")
+    ap.add_argument("--kernel", default=None,
+                    choices=["auto", "fused", "composed"],
+                    help="hot-loop implementation on any backend: fused "
+                         "Pallas kernels or the composed XLA pipeline "
+                         "(bit-identical results) — docs/KERNELS.md")
     ap.add_argument("--trace", action="store_true",
                     help="also print the per-level trace records")
     args = ap.parse_args()
@@ -71,7 +76,7 @@ def main() -> int:
         seed=args.seed, backend=args.backend,
         devices=args.devices or 1,
         contraction=args.contraction, weights=args.weights,
-        balance=args.balance)
+        balance=args.balance, kernel=args.kernel)
     engine = Partitioner()
     res = engine.run(req)
     print(json.dumps(res.summary()))

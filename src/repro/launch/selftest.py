@@ -22,7 +22,12 @@ shape-bucketed batched dispatch (``--test batch``: a duplicate-heavy
 hot mix is served in batches bit-identically to solo runs with
 coalescing observed in the metrics, and the stacked level-0 clustering
 path — forced on even on CPU hosts — reproduces solo results bit for
-bit), and the cross-process fabric (``--test fabric``, *not* part of
+bit), and the fused Pallas hot-loop kernels (``--test kernels``, *not* part
+of ``all`` — off-TPU they run interpret mode, so the step carries its
+own reduced instance: the ``kernel="fused"`` pipeline must reproduce
+``"composed"`` labels and cut bit for bit on the host path and under
+both distributed memory models), and the cross-process fabric
+(``--test fabric``, *not* part of
 ``all`` because it spawns real worker subprocesses: a front door plus
 two worker processes serve bit-identically to solo runs, a SIGKILLed
 worker's admitted requests fail over to the survivor, and a SIGTERM
@@ -41,7 +46,8 @@ def main() -> int:
     ap.add_argument("--test", default="all",
                     choices=["all", "collectives", "halo", "cluster",
                              "contract", "partition", "refine", "balance",
-                             "smoke", "api", "serve", "batch", "fabric"])
+                             "smoke", "api", "serve", "batch", "fabric",
+                             "kernels"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -500,6 +506,43 @@ def main() -> int:
                all(np.array_equal(o.assignment, s.assignment) and
                    o.cut == s.cut for o, s in zip(out, solo)),
                cuts=[o.cut for o in out])
+
+    if args.test == "kernels":
+        # fused Pallas hot loops vs the composed XLA pipeline: one knob
+        # (PartitionerConfig.kernel), every kernel (lp_move, seg_merge,
+        # bal_round), labels AND cut bit-identical — host path and both
+        # distributed memory models. Not part of "all": off-TPU the
+        # fused path runs Pallas interpret mode, so it gets its own CI
+        # step with a reduced instance (docs/KERNELS.md).
+        import dataclasses
+        nn = max(400, args.n // 4)
+        gk = generators.make(args.family, nn, 8.0, seed=13)
+        kk = max(2, args.k // 2)
+        cfg_k = PartitionerConfig(contraction_limit=80, ip_repetitions=1,
+                                  num_chunks=4, seed=3)
+        parts = {}
+        for mode in ("composed", "fused"):
+            parts[mode] = partition(
+                gk, kk, dataclasses.replace(cfg_k, kernel=mode))
+        cut_f = metrics.edge_cut(gk, parts["fused"])
+        report("kernels.host_bit_identical",
+               np.array_equal(parts["fused"], parts["composed"]) and
+               cut_f == metrics.edge_cut(gk, parts["composed"]),
+               cut=cut_f, n=gk.n)
+        for name, contraction, weights, balance in (
+                ("host_replicated", "host", "replicated", "host"),
+                ("sharded_owner", "sharded", "owner", "dist")):
+            got = {}
+            for mode in ("composed", "fused"):
+                cfg_d = dataclasses.replace(
+                    cfg_k, contraction=contraction, weights=weights,
+                    balance=balance, kernel=mode)
+                got[mode] = dist_partition_impl(gk, kk, P, cfg=cfg_d)
+            feas = metrics.is_feasible(gk, got["fused"], kk, 0.03)
+            report(f"kernels.dist_bit_identical_{name}",
+                   np.array_equal(got["fused"], got["composed"]) and feas,
+                   cut=metrics.edge_cut(gk, got["fused"]), P=P,
+                   feasible=feas)
 
     if args.test == "fabric":
         # not part of "all": spawns real worker subprocesses (each

@@ -1,0 +1,287 @@
+"""Fused hot-loop kernel validation (lp_move / seg_merge / bal_round).
+
+Two layers, all bit-exact (integer math end to end):
+
+* hypothesis property tests of each Pallas kernel (interpret=True on
+  CPU) against its composed-XLA oracle in ``kernels/*/ref.py``, with
+  the padding edges the ELL layout produces in production — sentinel
+  ``-1`` neighbor labels, zero-weight padded arcs, fully-padded rows,
+  and record counts that are not a power of two / lane multiple before
+  padding;
+* end-to-end equality of the wired entry points under
+  ``kernel="fused"`` vs ``kernel="composed"`` (labels AND cut), the
+  same invariant ``launch/selftest.py --test kernels`` enforces on
+  multi-device meshes.
+
+Shapes are kept fixed inside each property so interpret-mode jit
+compiles once per test, not once per example.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip (not error) without hypothesis
+    _skip = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(*_a, **_k):
+        return lambda fn: _skip(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _NullStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
+
+import jax.numpy as jnp
+
+from repro.core import metrics
+from repro.core.balance import rebalance
+from repro.core.coarsening import cluster
+from repro.core.contraction import contract, dedup_arcs
+from repro.core.deep_mgp import PartitionerConfig, partition
+from repro.graphs import generators
+from repro.kernels.bal_round.bal_round import (NEG_INF, bal_scores,
+                                               greedy_pick)
+from repro.kernels.bal_round.ref import bal_scores_ref, greedy_pick_ref
+from repro.kernels.lp_move.lp_move import I32_MAX, lp_move_chunk
+from repro.kernels.lp_move.ref import lp_move_chunk_ref
+from repro.kernels.seg_merge.seg_merge import seg_merge
+from repro.kernels.seg_merge.ref import seg_merge_ref
+
+
+# ---------------------------------------------------------------------------
+# lp_move: fused LP move kernel vs composed oracle
+# ---------------------------------------------------------------------------
+
+R_LP, D_LP = 64, 128
+
+
+def _rand_move_inputs(rng, n_labels, W):
+    """ELL chunk operands with production padding: ~25% sentinel lanes
+    (label -1, weight 0) and the last rows fully padded."""
+    nlab = rng.integers(0, n_labels, (R_LP, D_LP)).astype(np.int32)
+    nlab[rng.random((R_LP, D_LP)) < 0.25] = -1
+    nlab[-4:] = -1                                   # fully padded rows
+    nw = rng.integers(1, 6, (R_LP, D_LP)).astype(np.int32)
+    nw[nlab < 0] = 0                                 # zero-weight padding
+    ncw = rng.integers(0, 2 * W + 2, (R_LP, D_LP)).astype(np.int32)
+    own = rng.integers(0, n_labels, (R_LP, 1)).astype(np.int32)
+    vw = rng.integers(1, 4, (R_LP, 1)).astype(np.int32)
+    scal = np.array([[W, int(rng.integers(0, 1000))]], dtype=np.int32)
+    salt = np.array([[rng.integers(0, 2**32)]], dtype=np.uint32)
+    nbud = rng.integers(0, 2 * W + 2, (R_LP, D_LP)).astype(np.int32)
+    return nlab, nw, ncw, own, vw, scal, salt, nbud
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_labels=st.integers(2, 40),
+       W=st.integers(2, 30))
+def test_lp_move_chunk_matches_ref_host(seed, n_labels, W):
+    rng = np.random.default_rng(seed)
+    nlab, nw, ncw, own, vw, scal, salt, _ = _rand_move_inputs(
+        rng, n_labels, W)
+    args = [jnp.asarray(x) for x in (nlab, nw, ncw, own, vw, scal, salt)]
+    moved, tgt = lp_move_chunk(*args, fit_sum=True)
+    rmoved, rtgt = lp_move_chunk_ref(*args, fit_sum=True)
+    np.testing.assert_array_equal(np.asarray(moved), np.asarray(rmoved))
+    np.testing.assert_array_equal(np.asarray(tgt), np.asarray(rtgt))
+    # fully padded rows never move
+    assert not np.asarray(moved)[-4:].any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), W=st.integers(2, 30))
+def test_lp_move_chunk_matches_ref_dist(seed, W):
+    """The dist admission test (per-neighbor budget, fit_sum=False)."""
+    rng = np.random.default_rng(seed)
+    nlab, nw, ncw, own, vw, scal, salt, nbud = _rand_move_inputs(
+        rng, 24, W)
+    args = [jnp.asarray(x) for x in (nlab, nw, ncw, own, vw, scal, salt,
+                                     nbud)]
+    moved, tgt = lp_move_chunk(*args, fit_sum=False)
+    rmoved, rtgt = lp_move_chunk_ref(*args, fit_sum=False)
+    np.testing.assert_array_equal(np.asarray(moved), np.asarray(rmoved))
+    np.testing.assert_array_equal(np.asarray(tgt), np.asarray(rtgt))
+
+
+def test_cluster_fused_vs_composed_bit_identical():
+    """End to end through ``coarsening.cluster`` — the graph's max
+    degree is far below one lane width, so ELL pads D up to 128 (the
+    "D not a multiple of 128 pre-pad" edge)."""
+    g = generators.make("rgg2d", 500, 8.0, seed=11)
+    W = max(1, g.total_vweight // 10)
+    lab_c = cluster(g, W, num_iterations=2, num_chunks=4, seed=2,
+                    kernel="composed")
+    lab_f = cluster(g, W, num_iterations=2, num_chunks=4, seed=2,
+                    kernel="fused")
+    np.testing.assert_array_equal(lab_f, lab_c)
+
+
+# ---------------------------------------------------------------------------
+# seg_merge: segmented sort + duplicate-arc merge vs composed oracle
+# ---------------------------------------------------------------------------
+
+L_SM = 256
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), ids=st.integers(2, 40))
+def test_seg_merge_matches_ref(seed, ids):
+    """Duplicate-heavy records incl. ~20% I32_MAX padding sentinels."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, ids, L_SM).astype(np.int32)
+    dst = rng.integers(0, ids, L_SM).astype(np.int32)
+    w = rng.integers(1, 9, L_SM).astype(np.int32)
+    pad = rng.random(L_SM) < 0.2
+    src[pad] = I32_MAX
+    dst[pad] = I32_MAX
+    w[pad] = 0
+    s_src, s_dst, tot, first = seg_merge(src, dst, w)
+    r_src, r_dst, r_tot, r_first = seg_merge_ref(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(s_src), np.asarray(r_src))
+    np.testing.assert_array_equal(np.asarray(s_dst), np.asarray(r_dst))
+    np.testing.assert_array_equal(np.asarray(tot), np.asarray(r_tot))
+    np.testing.assert_array_equal(np.asarray(first), np.asarray(r_first))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dedup_arcs_fused_vs_composed(seed):
+    """Non-pow2 record count (pads internally), self loops dropped,
+    parallel arcs merged — fused output bit-identical incl. dtypes."""
+    rng = np.random.default_rng(seed)
+    m = 300                                   # pads to L=512 inside
+    csrc = rng.integers(0, 25, m)
+    cdst = rng.integers(0, 25, m)
+    w = rng.integers(1, 7, m)
+    outs_c = dedup_arcs(csrc, cdst, w, kernel="composed")
+    outs_f = dedup_arcs(csrc, cdst, w, kernel="fused")
+    for a_f, a_c in zip(outs_f, outs_c):
+        assert a_f.dtype == a_c.dtype == np.int64
+        np.testing.assert_array_equal(a_f, a_c)
+
+
+def test_contract_fused_vs_composed_bit_identical():
+    g = generators.make("rgg2d", 500, 8.0, seed=11)
+    labels = cluster(g, max(1, g.total_vweight // 10), num_iterations=2,
+                     num_chunks=4, seed=2, kernel="composed")
+    (gc_c, map_c) = contract(g, labels, kernel="composed")
+    (gc_f, map_f) = contract(g, labels, kernel="fused")
+    np.testing.assert_array_equal(map_f, map_c)
+    np.testing.assert_array_equal(gc_f.indptr, gc_c.indptr)
+    np.testing.assert_array_equal(gc_f.adjncy, gc_c.adjncy)
+    np.testing.assert_array_equal(gc_f.eweights, gc_c.eweights)
+    np.testing.assert_array_equal(gc_f.vweights, gc_c.vweights)
+
+
+# ---------------------------------------------------------------------------
+# bal_round: balance scores + greedy pick vs composed oracles
+# ---------------------------------------------------------------------------
+
+R_BR, D_BR = 64, 128
+
+
+def _rand_bal_inputs(rng, k, restricted):
+    nlab = rng.integers(0, k, (R_BR, D_BR)).astype(np.int32)
+    nlab[rng.random((R_BR, D_BR)) < 0.25] = -1
+    nlab[-4:] = -1
+    nw = rng.integers(1, 6, (R_BR, D_BR)).astype(np.int32)
+    nw[nlab < 0] = 0
+    nbw = rng.integers(0, 40, (R_BR, D_BR)).astype(np.int32)
+    nlm = rng.integers(10, 40, (R_BR, D_BR)).astype(np.int32)
+    own = rng.integers(0, k, (R_BR, 1)).astype(np.int32)
+    vw = rng.integers(1, 4, (R_BR, 1)).astype(np.int32)
+    ovr = (rng.random((R_BR, 1)) < 0.5).astype(np.int32)
+    vld = np.ones((R_BR, 1), np.int32)
+    vld[-4:] = 0
+    fb_t = rng.integers(0, k, (R_BR, 1)).astype(np.int32)
+    fb_ok = (rng.random((R_BR, 1)) < 0.5).astype(np.int32)
+    salt = np.array([[rng.integers(0, 2**32)]], dtype=np.uint32)
+    if not restricted:
+        return (nlab, nw, nbw, nlm, own, vw, ovr, vld, fb_t, fb_ok,
+                salt), {}
+    par = rng.integers(0, max(1, k // 2), k + 1).astype(np.int32)
+    npar = np.where(nlab >= 0, par[np.maximum(nlab, 0)], -2).astype(
+        np.int32)
+    opar = par[own]
+    return (nlab, nw, nbw, nlm, own, vw, ovr, vld, fb_t, fb_ok,
+            salt), {"npar": npar, "opar": opar}
+
+
+@pytest.mark.parametrize("restricted", [False, True])
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 32))
+def test_bal_scores_matches_ref(restricted, seed, k):
+    rng = np.random.default_rng(seed)
+    args, kw = _rand_bal_inputs(rng, k, restricted)
+    args = [jnp.asarray(x) for x in args]
+    kw = {k_: jnp.asarray(v) for k_, v in kw.items()}
+    rel, tgt = bal_scores(*args, **kw, restricted=restricted)
+    r_rel, r_tgt = bal_scores_ref(*args, **kw, restricted=restricted)
+    np.testing.assert_array_equal(np.asarray(rel), np.asarray(r_rel))
+    np.testing.assert_array_equal(np.asarray(tgt), np.asarray(r_tgt))
+    # padded / invalid rows can never be movable
+    assert np.all(np.asarray(rel)[-4:] == NEG_INF)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_greedy_pick_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    M, K = 64, 16
+    vals = rng.standard_normal(M).astype(np.float32)
+    vals[rng.random(M) < 0.3] = NEG_INF              # masked pool slots
+    tgt = rng.integers(0, K, M).astype(np.int32)
+    src = rng.integers(0, K, M).astype(np.int32)
+    cw = rng.integers(1, 5, M).astype(np.int32)
+    bw = rng.integers(0, 60, K).astype(np.int32)
+    lm = rng.integers(10, 50, K).astype(np.int32)
+    acc, bw_out = greedy_pick(*(jnp.asarray(x) for x in
+                                (vals, tgt, src, cw, bw, lm)))
+    r_acc, r_bw = greedy_pick_ref(*(jnp.asarray(x) for x in
+                                    (vals, tgt, src, cw, bw, lm)))
+    np.testing.assert_array_equal(np.asarray(acc).astype(bool),
+                                  np.asarray(r_acc))
+    np.testing.assert_array_equal(np.asarray(bw_out), np.asarray(r_bw))
+
+
+def test_rebalance_fused_vs_composed_bit_identical():
+    """Skewed start (70% in block 0) so the round loop actually runs."""
+    g = generators.make("rgg2d", 500, 8.0, seed=11)
+    k = 6
+    lmax = np.full(k, metrics.l_max(g.total_vweight, k, 0.03,
+                                    int(g.vweights.max())), dtype=np.int64)
+    rng = np.random.default_rng(5)
+    part0 = np.where(rng.random(g.n) < 0.7, 0,
+                     rng.integers(0, k, g.n)).astype(np.int64)
+    st_c, st_f = {}, {}
+    out_c = rebalance(g, part0.copy(), lmax, seed=7, kernel="composed",
+                      stats=st_c)
+    out_f = rebalance(g, part0.copy(), lmax, seed=7, kernel="fused",
+                      stats=st_f)
+    np.testing.assert_array_equal(out_f, out_c)
+    assert st_f["rounds"] == st_c["rounds"]
+    assert metrics.is_feasible(g, out_f, k, 0.03)
+
+
+# ---------------------------------------------------------------------------
+# full pipeline: one knob, every kernel, labels AND cut identical
+# ---------------------------------------------------------------------------
+
+def test_partition_fused_vs_composed_bit_identical():
+    g = generators.make("rgg2d", 500, 8.0, seed=13)
+    k = 4
+    parts = {}
+    for mode in ("composed", "fused"):
+        cfg = PartitionerConfig(contraction_limit=80, ip_repetitions=1,
+                                num_chunks=4, seed=3, kernel=mode)
+        parts[mode] = partition(g, k, cfg)
+    np.testing.assert_array_equal(parts["fused"], parts["composed"])
+    assert metrics.edge_cut(g, parts["fused"]) == \
+        metrics.edge_cut(g, parts["composed"])
+    assert metrics.is_feasible(g, parts["fused"], k, 0.03)
