@@ -57,6 +57,52 @@ RATE_KEYS = {"throughput_rps", "batch_speedup"}
 # (it is a structural win — coalescing — not a machine-speed number)
 MIN_BATCH_SPEEDUP = 2.0
 
+# top-level sections each artifact must carry; a missing one means the
+# producing bench crashed mid-run or its writer changed shape, and the
+# gate must say *which* section and *which* producer instead of letting
+# a downstream lookup die with a bare KeyError
+EXPECTED_SECTIONS = {
+    "BENCH_api.json": ("instance", "backends"),
+    "BENCH_dist.json": ("modes",),
+    "BENCH_balance.json": ("modes", "pipeline"),
+    "BENCH_serve.json": ("meshes", "batched", "fabric"),
+    "BENCH_kernels.json": ("kernels", "roofline"),
+}
+
+# artifact -> the command that regenerates it (for error messages)
+PRODUCERS = {
+    "BENCH_api.json": "python -m benchmarks.api_bench",
+    "BENCH_dist.json": "python -m benchmarks.dist_bench",
+    "BENCH_balance.json": "python -m benchmarks.balance_bench",
+    "BENCH_serve.json": "python -m benchmarks.serve_bench",
+    "BENCH_kernels.json": "python -m benchmarks.kernels_bench",
+}
+
+
+class MissingSectionError(KeyError):
+    """A bench artifact lacks a section the gate relies on."""
+
+    def __init__(self, artifact: str, section: str):
+        self.artifact = artifact
+        self.section = section
+        producer = PRODUCERS.get(artifact, "the producing bench")
+        super().__init__(
+            f"{artifact}: missing expected section {section!r} — the "
+            f"artifact is incomplete (producer crashed mid-run or its "
+            f"writer changed shape); re-run `{producer}` or update "
+            "EXPECTED_SECTIONS if the rename is intentional")
+
+    def __str__(self) -> str:  # KeyError.__str__ would repr() the msg
+        return self.args[0]
+
+
+def check_sections(name: str, fresh: dict, failures: List[str]) -> None:
+    """Fail with a named, actionable message on missing sections."""
+    base = os.path.basename(name)
+    for section in EXPECTED_SECTIONS.get(base, ()):
+        if not isinstance(fresh, dict) or section not in fresh:
+            failures.append(str(MissingSectionError(base, section)))
+
 
 def load_baseline(name: str, ref: str,
                   baseline_dir: Optional[str]) -> Optional[dict]:
@@ -158,6 +204,7 @@ def check_file(name: str, ref: str, baseline_dir: Optional[str],
         return [f"{name}: fresh artifact missing (bench not run?)"], notes
     with open(name) as f:
         fresh = json.load(f)
+    check_sections(name, fresh, failures)
     check_invariants(fresh, name, failures)
     base = load_baseline(name, ref, baseline_dir)
     if base is None:

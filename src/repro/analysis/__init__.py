@@ -1,0 +1,13 @@
+"""Static analysis for the partitioner: jaxpr-level SPMD/overflow/VMEM
+verification plus repo AST lint.
+
+``python -m repro.analysis`` traces the real ``repro.dist`` /
+``repro.core`` entry points to jaxprs (never executing them) and runs
+four passes — collective consistency, int32 overflow dataflow, static
+VMEM estimation against the ``kernels.dispatch`` fallback gate, and
+an AST lint for rules ruff can't express. See ``docs/ANALYSIS.md``.
+"""
+
+from .findings import Allowlist, Finding, Report
+
+__all__ = ["Allowlist", "Finding", "Report"]

@@ -1,0 +1,101 @@
+"""``python -m repro.analysis`` — run the static verifier suite.
+
+Default mode traces the real entry points over a 2-device host mesh
+(forced before jax initializes; nothing executes or compiles) and
+runs all four passes; exit code 0 iff there are no unsuppressed
+findings. ``--fixture <name>`` runs one pass against its seeded
+violation instead and must exit nonzero — CI checks both directions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+FIXTURES = ("collective", "overflow", "lint", "vmem")
+
+
+def _run_fixture(name: str, devices: int, report) -> None:
+    from . import collectives_pass, lint, overflow_pass, vmem
+
+    if name == "collective":
+        from .fixtures import fixture_collective_mismatch as fx
+
+        collectives_pass.run(fx.captured(devices), report)
+    elif name == "overflow":
+        from .fixtures import fixture_overflow as fx
+
+        overflow_pass.run(fx.captured(), report)
+    elif name == "lint":
+        from .fixtures import fixture_lint as fx
+
+        lint.check_file(fx.__file__, report, serve_hot=True)
+    else:
+        from .fixtures import fixture_vmem as fx
+
+        vmem.run(report, static_fn=fx.static_bytes)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level SPMD/overflow/VMEM verifier + AST lint",
+    )
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=2,
+        help="forced host device count for the tracing mesh",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="also write the JSON report to PATH",
+    )
+    ap.add_argument(
+        "--fixture",
+        default=None,
+        choices=FIXTURES,
+        help="run one pass against its seeded violation instead",
+    )
+    args = ap.parse_args(argv)
+
+    # the tracing mesh needs >= 2 host devices, fixed before jax init
+    from repro.api import runtime
+
+    runtime.force_host_devices(args.devices)
+
+    from . import collectives_pass, lint, overflow_pass, vmem
+    from .findings import Allowlist, Report
+
+    if args.fixture:
+        report = Report(Allowlist([]))  # fixtures: nothing suppressed
+        _run_fixture(args.fixture, args.devices, report)
+    else:
+        report = Report(Allowlist.load())
+        from . import entrypoints
+
+        jaxprs = entrypoints.collect_jaxprs(args.devices)
+        sites = collectives_pass.run(
+            jaxprs, report, expect_shard_maps=True
+        )
+        overflow_pass.run(jaxprs, report)
+        points = vmem.run(report)
+        files = lint.run(report)
+        report.note(
+            f"traced {len(jaxprs)} entries ({sites} shard_map sites), "
+            f"vmem grid {points} points, linted {files} files"
+        )
+
+    print(report.to_text())
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            f.write(report.to_json() + os.linesep)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,239 @@
+"""Registry of the real entry points the verifier traces.
+
+Each entry names the public call that stages a program (the same one
+the partitioner drivers use), the callee attribute :mod:`.tracing`
+patches to capture it, and the variant axes that change the staged
+program: weight-table layout (``replicated`` vs ``owner``), routing,
+and kernel mode (``composed`` XLA vs ``fused`` Pallas). Tracing never
+executes anything — a 2-device host mesh is enough to stage the same
+collectives an 8192-core run would issue.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Tuple
+
+import numpy as np
+
+from . import tracing
+
+# entry spec: (name, module, patched attr, is_builder, invoke thunk)
+Spec = Tuple[str, Any, str, bool, Callable[[], Any]]
+
+
+def build_specs(P: int = 2) -> List[Spec]:
+    """Entry registry over a tiny graph sharded across ``P`` PEs."""
+    from repro.core import balance as c_balance
+    from repro.core import coarsening as c_coarsening
+    from repro.core import contraction as c_contraction
+    from repro.core import lp as c_lp
+    from repro.core.coarsening import enforce_cluster_weights
+    from repro.dist import dist_balance, dist_contraction, dist_lp
+    from repro.graphs import generators
+    from repro.graphs.distribute import distribute_graph
+    from repro.kernels.bal_round import ops as bal_ops
+    from repro.kernels.lp_move import ops as move_ops
+    from repro.kernels.seg_merge import ops as seg_ops
+
+    g = generators.make("rgg2d", 240, 6.0, seed=1)
+    shards = distribute_graph(g, P)
+    k = 4
+    total = int(g.total_vweight)
+    W = max(4, total // 8)
+    rng = np.random.default_rng(3)
+    part = rng.integers(0, k, size=g.n).astype(np.int64)
+    # all-in-one-block start: infeasible against lvec, so the balancer
+    # entry points cannot early-return before staging a round
+    part0 = np.zeros(g.n, dtype=np.int64)
+    lvec = np.full(k, max(1, (total + k - 1) // k + 1), dtype=np.int64)
+    labels = rng.integers(0, max(2, k), size=g.n).astype(np.int64)
+    labels_enf = enforce_cluster_weights(
+        labels.copy(), np.asarray(g.vweights), W
+    )
+    # small duplicate-heavy arc set for the dedup (seg_merge) entry
+    csrc = np.array([0, 1, 1, 2, 0, 2, 1], dtype=np.int64)
+    cdst = np.array([1, 0, 2, 1, 1, 2, 2], dtype=np.int64)
+    cw = np.ones(csrc.size, dtype=np.int64)
+
+    def cluster(weights: str = "replicated", kernel: str = "composed"):
+        return lambda: dist_lp.dist_cluster(
+            shards,
+            W,
+            num_iterations=1,
+            num_chunks=2,
+            seed=0,
+            use_grid=True,
+            weights=weights,
+            kernel=kernel,
+        )
+
+    def refine(weights: str):
+        return lambda: dist_lp.dist_lp_refine(
+            shards,
+            part,
+            lvec,
+            num_iterations=1,
+            num_chunks=2,
+            seed=0,
+            use_grid=True,
+            weights=weights,
+        )
+
+    def rebalance(weights: str = "replicated", kernel: str = "composed"):
+        return lambda: dist_balance.dist_rebalance(
+            shards,
+            part0,
+            lvec,
+            seed=1,
+            use_grid=True,
+            weights=weights,
+            kernel=kernel,
+        )
+
+    def contract(kernel: str):
+        return lambda: dist_contraction.dist_contract(
+            shards, labels_enf, use_grid=True, kernel=kernel
+        )
+
+    specs: List[Spec] = [
+        (
+            "dist_cluster.replicated",
+            dist_lp,
+            "_build_cluster_fn",
+            True,
+            cluster("replicated"),
+        ),
+        (
+            "dist_cluster.owner",
+            dist_lp,
+            "_build_cluster_fn",
+            True,
+            cluster("owner"),
+        ),
+        (
+            "dist_cluster.fused",
+            dist_lp,
+            "_build_cluster_fn",
+            True,
+            cluster("replicated", kernel="fused"),
+        ),
+        (
+            "dist_refine.replicated",
+            dist_lp,
+            "_build_refine_fn",
+            True,
+            refine("replicated"),
+        ),
+        (
+            "dist_refine.owner",
+            dist_lp,
+            "_build_refine_fn",
+            True,
+            refine("owner"),
+        ),
+        (
+            "dist_balance.replicated",
+            dist_balance,
+            "_build_balance_round_fn",
+            True,
+            rebalance("replicated"),
+        ),
+        (
+            "dist_balance.owner",
+            dist_balance,
+            "_build_balance_round_fn",
+            True,
+            rebalance("owner"),
+        ),
+        (
+            "dist_balance.fused",
+            dist_balance,
+            "_build_balance_round_fn",
+            True,
+            rebalance("replicated", kernel="fused"),
+        ),
+        (
+            "dist_enforce",
+            dist_balance,
+            "_build_enforce_fn",
+            True,
+            lambda: dist_balance.dist_enforce_cluster_weights(
+                shards, labels, W, use_grid=True
+            ),
+        ),
+        (
+            "dist_contract.composed",
+            dist_contraction,
+            "_build_exchange_fn",
+            True,
+            contract("composed"),
+        ),
+        (
+            "dist_contract.fused",
+            dist_contraction,
+            "_build_exchange_fn",
+            True,
+            contract("fused"),
+        ),
+        (
+            "host_cluster.composed",
+            c_lp,
+            "cluster_iteration",
+            False,
+            lambda: c_coarsening.cluster(
+                g,
+                W,
+                num_iterations=1,
+                num_chunks=2,
+                seed=0,
+                kernel="composed",
+            ),
+        ),
+        (
+            "host_cluster.fused",
+            move_ops,
+            "cluster_iteration_fused",
+            False,
+            lambda: c_coarsening.cluster(
+                g,
+                W,
+                num_iterations=1,
+                num_chunks=2,
+                seed=0,
+                kernel="fused",
+            ),
+        ),
+        (
+            "host_balance.composed",
+            c_balance,
+            "balance_round",
+            False,
+            lambda: c_balance.rebalance(
+                g, part0.copy(), lvec, seed=3, kernel="composed"
+            ),
+        ),
+        (
+            "host_balance.fused",
+            bal_ops,
+            "balance_round_fused",
+            False,
+            lambda: c_balance.rebalance(
+                g, part0.copy(), lvec, seed=3, kernel="fused"
+            ),
+        ),
+        (
+            "host_dedup.fused",
+            seg_ops,
+            "seg_merge",
+            False,
+            lambda: c_contraction.dedup_arcs(
+                csrc, cdst, cw, kernel="fused"
+            ),
+        ),
+    ]
+    return specs
+
+
+def collect_jaxprs(P: int = 2) -> List[Tuple[str, Any, Tuple[str, str]]]:
+    """Trace every entry; returns ``[(name, jaxpr, builder site)]``."""
+    return tracing.capture_all(build_specs(P))

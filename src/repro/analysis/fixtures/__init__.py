@@ -1,0 +1,7 @@
+"""Seeded-violation fixtures proving each analysis pass fires.
+
+Each module stages (or merely contains, for the AST lint) exactly the
+defect its pass exists to catch; ``python -m repro.analysis --fixture
+<name>`` must exit nonzero on every one of them. Excluded from the
+normal repo sweep.
+"""

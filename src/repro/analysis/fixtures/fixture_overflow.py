@@ -1,0 +1,27 @@
+"""Seeded overflow violation: the unguarded int32 sum-form admission
+check ``cluster_w[label] + vweight <= budget`` — exactly the wrap
+PR 4 rewrote into the guard form ``w <= budget - c``. The overflow
+pass must flag the comparison (OFL001).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+
+def captured() -> List[Tuple[str, Any]]:
+    """Stage the defective program; returns ``[(name, jaxpr)]``."""
+    import jax
+    import jax.numpy as jnp
+
+    def admit(cluster_w, vweights, labels, budget):
+        cw = cluster_w[labels]
+        proposed = cw + vweights  # int32 sum that can wrap negative
+        return proposed <= budget  # unguarded order comparison
+
+    n = 8
+    cw = jnp.ones((n,), jnp.int32)
+    vw = jnp.ones((n,), jnp.int32)
+    lab = jnp.zeros((n,), jnp.int32)
+    bud = jnp.full((n,), 100, jnp.int32)
+    return [("fixture_overflow", jax.make_jaxpr(admit)(cw, vw, lab, bud))]

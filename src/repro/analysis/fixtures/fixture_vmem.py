@@ -1,0 +1,14 @@
+"""Seeded VMEM estimator violation: a broken static inventory that
+forgot a fifth of the working set (think: the row-tile pairwise masks
+dropped from the ledger). The cross-check against the runtime gate
+must flag the divergence (VMEM001).
+"""
+
+from __future__ import annotations
+
+
+def static_bytes(kernel: str, point: dict) -> int:
+    """A 20%-under inventory — beyond the 5% agreement budget."""
+    from repro.analysis import vmem
+
+    return int(vmem._static_bytes(kernel, point) * 0.8)

@@ -1,0 +1,230 @@
+"""Int32 overflow dataflow pass over captured jaxprs.
+
+The failure mode (PR 4 fixed a batch by hand): weight arithmetic is
+int32 on purpose — device tables stay compact — and the repo's
+contract is that *totals* are range-checked up front
+(``_check_int32_weights``, ``build_chunks``) while *per-comparison*
+arithmetic must be arranged so it cannot wrap. The sanctioned guard is
+the subtraction form ``w <= budget - c``; the bug shape is the sum
+form ``w + c <= budget``, where ``w + c`` can exceed 2^31 - 1 and wrap
+negative, silently admitting an overweight move.
+
+The pass taints every int32 value produced by an ``add``/``mul`` of
+two non-literal operands (a "summed" value that may exceed the int32
+range even when both inputs are in range) and flags any order
+comparison (``lt``/``le``/``gt``/``ge``) with a summed operand —
+rule ``OFL001``. The guard form never performs a widening add, so it
+passes untouched; an explicit widen (``add`` in int64) also passes
+because the add is no longer an int32 op. Reductions
+(``reduce_sum``/``cumsum``/``psum``/scatter-add) are *not* treated as
+summed: they are exactly the totals the up-front range checks bound.
+Unsigned int32 is excluded — the hash mixers wrap by design.
+
+Sites that are genuinely bounded (e.g. ``cluster_w + d_in`` where
+both terms are bounded by the checked global total) are suppressed
+via ``[[overflow]]`` allowlist entries keyed on (file, function),
+each with the reason the bound holds.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+from .collectives_pass import _source_site, _sub_jaxprs
+from .findings import Finding, Report
+
+# int32 add/mul of two non-literal operands -> result may be out of
+# range ("summed")
+_SUM_PRIMS = {"add", "mul", "sub"}
+# order comparisons that silently go wrong on wrapped operands
+_CMP_PRIMS = {"lt", "le", "gt", "ge"}
+# reductions bounded by the repo's up-front total-weight range checks
+_BOUNDED_PRIMS = {
+    "reduce_sum",
+    "cumsum",
+    "cumlogsumexp",
+    "psum",
+    "psum2",
+    "segment_sum",
+    "reduce_max",
+    "reduce_min",
+    "reduce_and",
+    "reduce_or",
+    "argmax",
+    "argmin",
+    "iota",
+}
+# shape/select/indexing ops through which taint flows unchanged
+_TRANSPARENT_PRIMS = {
+    "select_n",
+    "max",
+    "min",
+    "neg",
+    "abs",
+    "gather",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "slice",
+    "squeeze",
+    "reshape",
+    "broadcast_in_dim",
+    "transpose",
+    "concatenate",
+    "rev",
+    "expand_dims",
+    "convert_element_type",
+    "pad",
+    "copy",
+    "all_gather",
+    "all_to_all",
+    "ppermute",
+    "pbroadcast",
+    "sort",
+    "dynamic_gather",
+    "where",
+    "clamp",
+    "rem",
+    "device_put",
+    "optimization_barrier",
+}
+
+
+def _is_i32(aval: Any) -> bool:
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and str(dtype) == "int32"
+
+
+def _is_lit(var: Any) -> bool:
+    return hasattr(var, "val")
+
+
+class _Taint:
+    """Per-jaxpr var -> summed flag, scoped so vars don't collide."""
+
+    def __init__(self) -> None:
+        self.summed: Dict[int, bool] = {}
+
+    def get(self, var: Any) -> bool:
+        if _is_lit(var):
+            return False
+        return self.summed.get(id(var), False)
+
+    def set(self, var: Any, val: bool) -> None:
+        if val:
+            self.summed[id(var)] = True
+
+
+def _walk(
+    jaxpr: Any,
+    taint: _Taint,
+    entry: str,
+    report: Report,
+    in_summed: List[bool],
+) -> List[bool]:
+    """Propagate taint through ``jaxpr``; returns outvar summed flags."""
+    inner = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    for var, summed in zip(inner.invars, in_summed):
+        taint.set(var, summed)
+
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        ops = [taint.get(v) for v in eqn.invars]
+
+        if name in _CMP_PRIMS and any(ops):
+            file, line, func = _source_site(eqn)
+            report.add(
+                Finding(
+                    rule="OFL001",
+                    pass_name="overflow",
+                    message=(
+                        f"{name} compares an int32 sum that can wrap "
+                        "— use the guard form `w <= budget - c` or "
+                        "widen to int64 before adding"
+                    ),
+                    file=file,
+                    line=line,
+                    function=func,
+                    entry=entry,
+                )
+            )
+            continue
+
+        subs = list(_sub_jaxprs(eqn))
+        if subs:
+            out_flags = _run_subjaxprs(eqn, subs, taint, entry, report)
+            for var, flag in zip(eqn.outvars, out_flags):
+                taint.set(var, flag)
+            continue
+
+        if name in _SUM_PRIMS and len(eqn.invars) == 2:
+            out = eqn.outvars[0]
+            fresh = (
+                name in ("add", "mul")
+                and _is_i32(out.aval)
+                and not any(_is_lit(v) for v in eqn.invars)
+            )
+            taint.set(out, fresh or any(ops))
+        elif name in _BOUNDED_PRIMS:
+            pass  # bounded by the up-front total range checks
+        elif name in _TRANSPARENT_PRIMS or name.startswith("scatter"):
+            propagate = any(ops)
+            for var in eqn.outvars:
+                taint.set(var, propagate)
+        # anything else (hash mixers, bit ops, ...) drops taint
+
+    return [taint.get(v) for v in inner.outvars]
+
+
+def _run_subjaxprs(
+    eqn: Any,
+    subs: List[Tuple[str, Any]],
+    taint: _Taint,
+    entry: str,
+    report: Report,
+) -> List[bool]:
+    """Map taint through call-like eqns (pjit/cond/scan/shard_map)."""
+    name = eqn.primitive.name
+    ops = [taint.get(v) for v in eqn.invars]
+    n_out = len(eqn.outvars)
+    out = [False] * n_out
+
+    def merge(flags: List[bool]) -> None:
+        for i in range(min(n_out, len(flags))):
+            out[i] = out[i] or flags[i]
+
+    for _, sub in subs:
+        inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+        n_in = len(inner.invars)
+        if name == "cond":
+            # operand 0 is the predicate/index
+            flags = ops[1 : 1 + n_in]
+        elif name == "while":
+            flags = ops[len(ops) - n_in :]
+        else:
+            flags = ops[:n_in]
+        flags = flags + [False] * (n_in - len(flags))
+        sub_out = _walk(sub, taint, entry, report, flags)
+        if name == "scan":
+            # run the body once more with carry taint fed back, so a
+            # sum formed in iteration i is seen by iteration i + 1
+            n_consts = int(eqn.params.get("num_consts", 0))
+            n_carry = int(eqn.params.get("num_carry", 0))
+            fed = list(flags)
+            for i in range(min(n_carry, len(sub_out))):
+                j = n_consts + i
+                if j < len(fed):
+                    fed[j] = fed[j] or sub_out[i]
+            sub_out = _walk(sub, taint, entry, report, fed)
+        merge(sub_out)
+    return out
+
+
+def run(jaxprs: List[Tuple[str, Any]], report: Report) -> int:
+    """Run the overflow pass on every captured program."""
+    checked = 0
+    for item in jaxprs:
+        entry, jaxpr = item[0], item[1]
+        inner = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+        _walk(jaxpr, _Taint(), entry, report, [False] * len(inner.invars))
+        checked += 1
+    return checked

@@ -1,0 +1,119 @@
+"""Capture jaxprs from *real* entry points without executing them.
+
+The verifier must see exactly the programs the partitioner stages —
+same builders, same argument preparation, same static configuration —
+but must never compile or run them (CI analyzes TPU-shaped programs on
+CPU runners). The trick: temporarily patch the callee attribute that an
+entry point looks up (a ``shard_map`` builder in ``repro.dist``, or a
+jitted chunk function in ``repro.core``) with a proxy that traces the
+real callee via :func:`jax.make_jaxpr` and raises a sentinel carrying
+the jaxpr. The public entry point runs its genuine argument prep, hits
+the proxy, and unwinds before anything touches a device.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Tuple
+
+import jax
+
+from .findings import rel_to_repo
+
+
+class CapturedJaxpr(Exception):
+    """Sentinel carrying the traced jaxpr out of an entry point."""
+
+    def __init__(self, jaxpr: Any):
+        super().__init__("captured")
+        self.jaxpr = jaxpr
+
+
+def _is_array(x: Any) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def trace_call(fn: Callable, args: tuple, kwargs: dict) -> Any:
+    """``jax.make_jaxpr`` of ``fn(*args, **kwargs)``.
+
+    Array arguments (numpy or jax) become dynamic jaxpr inputs; every
+    other argument — chunk counts, static flags, ``interpret=`` — is
+    closed over, matching how the jitted callees mark them static.
+    """
+    dyn_pos = [i for i, a in enumerate(args) if _is_array(a)]
+    dyn_kw = sorted(k for k, v in kwargs.items() if _is_array(v))
+
+    def wrapper(*dyn: Any) -> Any:
+        full = list(args)
+        for slot, val in zip(dyn_pos, dyn[: len(dyn_pos)]):
+            full[slot] = val
+        kw = dict(kwargs)
+        for name, val in zip(dyn_kw, dyn[len(dyn_pos) :]):
+            kw[name] = val
+        return fn(*full, **kw)
+
+    vals = [args[i] for i in dyn_pos] + [kwargs[k] for k in dyn_kw]
+    return jax.make_jaxpr(wrapper)(*vals)
+
+
+def capture(
+    module: Any,
+    attr: str,
+    invoke: Callable[[], Any],
+    builder: bool = False,
+) -> Any:
+    """Run ``invoke()`` with ``module.attr`` patched to capture a jaxpr.
+
+    ``builder=False`` patches a traceable callee directly; its first
+    call is traced instead of executed. ``builder=True`` patches a
+    factory (the ``repro.dist`` ``_build_*_fn`` builders): the factory
+    runs for real (same static configuration, same ``shard_map``
+    wrapping) and only the *returned* function is proxied, so the
+    captured jaxpr contains the genuine ``shard_map`` equation.
+    """
+    real = getattr(module, attr)
+
+    if builder:
+
+        def patched(*bargs: Any, **bkw: Any) -> Any:
+            fn = real(*bargs, **bkw)
+
+            def proxy(*args: Any, **kwargs: Any) -> Any:
+                raise CapturedJaxpr(trace_call(fn, args, kwargs))
+
+            return proxy
+
+    else:
+
+        def patched(*args: Any, **kwargs: Any) -> Any:
+            raise CapturedJaxpr(trace_call(real, args, kwargs))
+
+    setattr(module, attr, patched)
+    try:
+        invoke()
+    except CapturedJaxpr as cap:
+        return cap.jaxpr
+    finally:
+        setattr(module, attr, real)
+    raise RuntimeError(
+        f"analysis: {module.__name__}.{attr} was never called by the "
+        "entry point — the tracing registry is out of date"
+    )
+
+
+def capture_all(
+    specs: List[Tuple[str, Any, str, bool, Callable[[], Any]]],
+) -> List[Tuple[str, Any, Tuple[str, str]]]:
+    """Capture ``[(entry_name, jaxpr, site)]`` for a registry of specs.
+
+    ``site`` is the (repo-relative file, function) of the patched
+    callee. Top-level equations of a captured jaxpr — notably the
+    ``shard_map`` a builder staged — carry *this module's* proxy
+    wrapper as their source frame, so passes anchor findings on those
+    equations to ``site`` instead; the allowlist keys on it.
+    """
+    out: List[Tuple[str, Any, Tuple[str, str]]] = []
+    for name, module, attr, builder, invoke in specs:
+        site = (rel_to_repo(getattr(module, "__file__", "")), attr)
+        jaxpr = capture(module, attr, invoke, builder=builder)
+        out.append((name, jaxpr, site))
+    return out

@@ -92,7 +92,7 @@ def available_backends() -> List[str]:
 class BackendContext:
     """Per-run state the facade/session threads into a backend."""
     devices: int = 1
-    mesh: object = None                 # pre-built 1D 'pe' mesh or None
+    mesh: Optional[object] = None       # pre-built 1D 'pe' mesh or None
     trace: Optional[list] = None
     # precomputed level-0 clustering labels (batched serving: one
     # stacked jit program clusters several requests' level 0 at once).

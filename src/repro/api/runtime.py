@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import os
 import sys
-from typing import Optional
+from typing import Any, List, Optional, Sequence
 
 _FLAG = "--xla_force_host_platform_device_count"
 
@@ -33,7 +33,8 @@ def device_count() -> int:
     return len(jax.devices())
 
 
-def device_slices(num_slices: int, devices_per_slice: int):
+def device_slices(num_slices: int,
+                  devices_per_slice: int) -> List[List[Any]]:
     """Carve the host's devices into ``num_slices`` disjoint contiguous
     slices of ``devices_per_slice`` devices each (the serving tier's
     worker meshes — saxml-style: one model server per device group).
@@ -79,7 +80,8 @@ def device_slices(num_slices: int, devices_per_slice: int):
 def distributed_init(coordinator_address: Optional[str] = None,
                      num_processes: Optional[int] = None,
                      process_id: Optional[int] = None,
-                     local_device_ids=None) -> dict:
+                     local_device_ids: Optional[Sequence[int]] = None
+                     ) -> dict:
     """Multi-process jax runtime for the serving fabric's workers.
 
     Wraps ``jax.distributed.initialize`` so each fabric worker process

@@ -166,9 +166,10 @@ def rebalance(g: Graph,
     Already-feasible partitions return immediately without building the
     O(m) chunk slabs or touching a device. ``kernel="fused"`` runs the
     round through the ``kernels.bal_round`` Pallas pair (bit-identical;
-    silently keeps the composed round when the ELL slab exceeds the VMEM
-    budget). ``stats``, when given, receives ``rounds`` / ``time_s`` /
-    ``gather_bytes`` for benchmarks.
+    keeps the composed round when the ELL slab exceeds the VMEM budget,
+    reporting the fallback via ``dispatch.report_fallback``). ``stats``,
+    when given, receives ``rounds`` / ``time_s`` / ``gather_bytes`` for
+    benchmarks.
     """
     n = g.n
     k = int(l_max_vec.shape[0])
@@ -205,6 +206,13 @@ def rebalance(g: Graph,
         if bal_ops.balance_ell_fits(idx.shape[0], idx.shape[1],
                                     restricted=restricted):
             fused_ell = (jnp.asarray(idx), jnp.asarray(ew))
+        else:
+            dispatch.report_fallback(
+                "bal_round",
+                bal_ops.bal_scores_vmem_bytes(
+                    idx.shape[0], idx.shape[1], bal_ops.ROW_TILE,
+                    restricted=restricted),
+                detail="rebalance")
     if fused_ell is None:
         src = jnp.asarray(chunks.src[0])
         dst = jnp.asarray(chunks.dst[0])

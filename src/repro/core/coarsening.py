@@ -89,6 +89,11 @@ def cluster_prepare(g: Graph, num_chunks: int, seed: int,
         chunks = move_ops.build_move_chunks(g2, num_chunks)
         if move_ops.move_chunks_fit_vmem(chunks):
             return perm, g2, chunks
+        _, R, D = chunks.shape
+        dispatch.report_fallback(
+            "lp_move",
+            move_ops.lp_move_vmem_bytes(R, D, move_ops.ROW_TILE),
+            detail="cluster_prepare")
     chunks = lp.build_chunks(g2, num_chunks)
     return perm, g2, chunks
 

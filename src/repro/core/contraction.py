@@ -24,14 +24,20 @@ def dedup_arcs(csrc: np.ndarray, cdst: np.ndarray, w: np.ndarray,
     local contraction kernel: ``contract`` runs it over the whole arc
     set, the distributed path runs it per PE before and after the edge
     exchange. ``kernel="fused"`` routes through the seg_merge Pallas
-    kernel (bit-identical; silently keeps numpy when the records exceed
-    the kernel's int32/VMEM envelope).
+    kernel (bit-identical; keeps numpy when the records exceed the
+    kernel's int32/VMEM envelope, reported via
+    ``dispatch.report_fallback``).
     """
     if dispatch.resolve_kernel_mode(kernel) == "fused":
         from ..kernels.seg_merge import ops as seg_ops
         if seg_ops.dedup_fits(csrc, cdst, w):
             return seg_ops.dedup_arcs_fused(
                 csrc, cdst, w, interpret=dispatch.kernel_interpret())
+        if csrc.size:
+            from ..kernels.seg_merge.seg_merge import seg_merge_vmem_bytes
+            dispatch.report_fallback(
+                "seg_merge", seg_merge_vmem_bytes(csrc.size),
+                detail="dedup_arcs (int32/VMEM envelope)")
     keep = csrc != cdst
     csrc, cdst, w = csrc[keep], cdst[keep], w[keep]
     if csrc.size == 0:

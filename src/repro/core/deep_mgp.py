@@ -323,4 +323,7 @@ def partition(g: Graph, k: int, cfg: Optional[PartitionerConfig] = None,
         trace_event(trace, phase="final", n=g.n, m=g.m, blocks=k,
                     cut=metrics.edge_cut(g, part),
                     time_s=round(time.perf_counter() - t0, 6))
+    from ..kernels import dispatch
+    for rec in dispatch.drain_fallback_records():
+        trace_event(trace, **rec)
     return part

@@ -231,6 +231,12 @@ def dist_rebalance(shards: GraphShards,
         ell_idx, ell_w = bal_ops.build_balance_ell_dist(shards)
         if not bal_ops.balance_ell_fits(ell_idx.shape[1],
                                         ell_idx.shape[2]):
+            dispatch.report_fallback(
+                "bal_round",
+                bal_ops.bal_scores_vmem_bytes(
+                    ell_idx.shape[1], ell_idx.shape[2],
+                    bal_ops.ROW_TILE),
+                detail="dist_rebalance")
             fused = False
     fn = _build_balance_round_fn(mesh, P, k, n, shards.n_loc,
                                  shards.n_ghost, top_m_loc, use_grid,
@@ -336,7 +342,7 @@ def _build_enforce_fn(mesh, P, n, n_loc, use_grid):
 
     pe = PS("pe")
     fn = shard_map(per_pe, mesh=mesh, in_specs=(pe, pe, pe, PS()),
-                   out_specs=(pe, pe))
+                   out_specs=(pe, pe), check_rep=True)
     return jax.jit(fn)
 
 

@@ -184,8 +184,11 @@ def dist_contract(shards: GraphShards,
             slab[p, q, :s1 - s0, 1] = cd[s0:s1]
             slab[p, q, :s1 - s0, 2] = cw[s0:s1]
     t0 = time.perf_counter()
-    fused = (kmode == "fused" and
-             seg_merge_vmem_bytes(P * S_e) <= dispatch.VMEM_BUDGET_BYTES)
+    est = seg_merge_vmem_bytes(P * S_e)
+    fused = kmode == "fused" and est <= dispatch.VMEM_BUDGET_BYTES
+    if kmode == "fused" and not fused:
+        dispatch.report_fallback("seg_merge", est,
+                                 detail="dist_contract")
     fn = _build_exchange_fn(mesh, P, S_e, use_grid, fused=fused,
                             interpret=dispatch.kernel_interpret())
     s_src, s_dst, wsum, first = (np.asarray(x) for x in fn(

@@ -379,8 +379,10 @@ def dist_cluster(shards: GraphShards,
         idx, ws_ell, v0s = move_ops.build_move_chunks_dist(
             shards, num_chunks)
         _, B, R, D = idx.shape
-        if lp_move_vmem_bytes(R, D, move_ops.ROW_TILE,
-                              fit_sum=False) > dispatch.VMEM_BUDGET_BYTES:
+        est = lp_move_vmem_bytes(R, D, move_ops.ROW_TILE, fit_sum=False)
+        if est > dispatch.VMEM_BUDGET_BYTES:
+            dispatch.report_fallback("lp_move", est,
+                                     detail="dist_cluster")
             fused = False
         else:
             slabs = (jnp.asarray(idx), jnp.asarray(ws_ell),
@@ -479,7 +481,7 @@ def _build_refine_fn(mesh, P, k, n_loc, n_ghost, B, num_iterations,
     rep = PS()
     fn = shard_map(per_pe, mesh=mesh,
                    in_specs=(pe, pe, pe, pe, pe, pe, pe, pe, rep, rep),
-                   out_specs=pe)
+                   out_specs=pe, check_rep=True)
     return jax.jit(fn)
 
 

@@ -191,6 +191,9 @@ def dist_partition_impl(g: Graph,
                         balance_rounds=bal_stats.get("rounds"),
                         cut=metrics.edge_cut(Gf, part),
                         time_s=round(time.perf_counter() - t0, 6))
+    from ..kernels import dispatch
+    for rec in dispatch.drain_fallback_records():
+        trace_event(trace, **rec)
     return part
 
 

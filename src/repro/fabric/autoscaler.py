@@ -47,16 +47,19 @@ class AutoscaleConfig:
     def validate(self) -> "AutoscaleConfig":
         if self.min_workers < 1:
             raise ValueError(
-                f"min_workers must be >= 1, got {self.min_workers}")
+                f"min_workers must be >= 1, got {self.min_workers}"
+            )
         if self.max_workers < self.min_workers:
             raise ValueError(
                 f"max_workers ({self.max_workers}) must be >= "
-                f"min_workers ({self.min_workers})")
+                f"min_workers ({self.min_workers})"
+            )
         if self.grow_windows < 1 or self.shrink_windows < 1:
             raise ValueError("grow_windows and shrink_windows must be >= 1")
         if self.eval_period_s <= 0:
             raise ValueError(
-                f"eval_period_s must be > 0, got {self.eval_period_s}")
+                f"eval_period_s must be > 0, got {self.eval_period_s}"
+            )
         return self
 
 
@@ -68,9 +71,15 @@ class AutoscalePolicy:
         self._pressure_streak = 0
         self._idle_streak = 0
 
-    def observe(self, *, workers: int, queue_depth: int,
-                deadline_misses: int = 0, submitted: int = 0,
-                inflight: int = 0) -> int:
+    def observe(
+        self,
+        *,
+        workers: int,
+        queue_depth: int,
+        deadline_misses: int = 0,
+        submitted: int = 0,
+        inflight: int = 0,
+    ) -> int:
         """One evaluation window -> +1 (grow), -1 (shrink) or 0.
 
         ``workers`` is the count the decision is bounded against (the
@@ -79,18 +88,21 @@ class AutoscalePolicy:
         worker while the first is still importing jax).
         """
         per = queue_depth / max(1, workers)
-        pressure = (per >= self.cfg.grow_queue_depth
-                    or deadline_misses > 0)
-        idle = (queue_depth == 0 and submitted == 0 and inflight == 0)
+        pressure = per >= self.cfg.grow_queue_depth or deadline_misses > 0
+        idle = queue_depth == 0 and submitted == 0 and inflight == 0
         self._pressure_streak = self._pressure_streak + 1 if pressure else 0
         self._idle_streak = self._idle_streak + 1 if idle else 0
-        if (self._pressure_streak >= self.cfg.grow_windows
-                and workers < self.cfg.max_workers):
+        if (
+            self._pressure_streak >= self.cfg.grow_windows
+            and workers < self.cfg.max_workers
+        ):
             self._pressure_streak = 0
             self._idle_streak = 0
             return 1
-        if (self._idle_streak >= self.cfg.shrink_windows
-                and workers > self.cfg.min_workers):
+        if (
+            self._idle_streak >= self.cfg.shrink_windows
+            and workers > self.cfg.min_workers
+        ):
             self._idle_streak = 0
             self._pressure_streak = 0
             return -1
@@ -105,9 +117,12 @@ class ProcessScaler:
     ``--frontdoor host:port``.
     """
 
-    def __init__(self, worker_args: Sequence[str],
-                 env: Optional[Dict[str, str]] = None,
-                 id_prefix: str = "auto"):
+    def __init__(
+        self,
+        worker_args: Sequence[str],
+        env: Optional[Dict[str, str]] = None,
+        id_prefix: str = "auto",
+    ):
         self._worker_args = list(worker_args)
         self._env = dict(env) if env is not None else dict(os.environ)
         self._id_prefix = id_prefix
@@ -130,11 +145,22 @@ class ProcessScaler:
         with self._lock:
             self._spawned += 1
             sid = f"{self._id_prefix}-{os.getpid()}-{self._spawned}"
-            cmd = [sys.executable, "-m", "repro.launch.fabric", "worker",
-                   "--server-id", sid] + self._worker_args
-            self._procs.append(subprocess.Popen(
-                cmd, env=self._env,
-                stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL))
+            cmd = [
+                sys.executable,
+                "-m",
+                "repro.launch.fabric",
+                "worker",
+                "--server-id",
+                sid,
+            ]
+            cmd += self._worker_args
+            proc = subprocess.Popen(
+                cmd,
+                env=self._env,
+                stdout=subprocess.DEVNULL,
+                stderr=subprocess.DEVNULL,
+            )
+            self._procs.append(proc)
             return sid
 
     def scale_down(self) -> Optional[int]:

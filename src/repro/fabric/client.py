@@ -24,8 +24,13 @@ from .protocol import FabricResult, recv_msg, send_msg
 class FabricClient:
     """Submit partition requests to a :class:`fabric.FrontDoor`."""
 
-    def __init__(self, host: str, port: int, *,
-                 connect_timeout: float = 10.0):
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        *,
+        connect_timeout: float = 10.0,
+    ):
         self.host, self.port = host, port
         self._sock = protocol.connect(host, port, timeout=connect_timeout)
         self._sock.settimeout(None)
@@ -35,8 +40,10 @@ class FabricClient:
         self._next_id = 0
         self._closed = False
         self._reader = threading.Thread(
-            target=self._recv_loop, name="repro-fabric-client",
-            daemon=True)
+            target=self._recv_loop,
+            name="repro-fabric-client",
+            daemon=True,
+        )
         self._reader.start()
 
     def _recv_loop(self) -> None:
@@ -52,14 +59,14 @@ class FabricClient:
                     fut = self._futures.pop(msg.get("id"), None)
                 if fut is not None:
                     self._set(fut, protocol.decode_result(msg["result"]))
-        except (OSError, protocol.ProtocolError,
-                json.JSONDecodeError) as exc:
+        except (OSError, protocol.ProtocolError, json.JSONDecodeError) as exc:
             err = f"{type(exc).__name__}: {exc}"
         with self._lock:
             orphans = list(self._futures.values())
             self._futures.clear()
-        lost = protocol.decode_result(protocol.error_result(
-            protocol.ERR_CONNECTION, err))
+        lost = protocol.decode_result(
+            protocol.error_result(protocol.ERR_CONNECTION, err)
+        )
         for fut in orphans:
             self._set(fut, lost)
 
@@ -70,33 +77,44 @@ class FabricClient:
         except Exception:
             pass  # cancelled by the caller
 
-    def submit(self, request, *, priority: int = 0,
-               deadline_s: Optional[float] = None,
-               timeout_s: Optional[float] = None
-               ) -> "Future[FabricResult]":
+    def submit(
+        self,
+        request,
+        *,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
+        timeout_s: Optional[float] = None,
+    ) -> "Future[FabricResult]":
         """Admit one request; resolves to a :class:`FabricResult`."""
         fut: "Future[FabricResult]" = Future()
         with self._lock:
             if self._closed:
-                self._set(fut, protocol.decode_result(
-                    protocol.error_result(protocol.ERR_CONNECTION,
-                                          "client closed")))
+                res = protocol.error_result(
+                    protocol.ERR_CONNECTION, "client closed"
+                )
+                self._set(fut, protocol.decode_result(res))
                 return fut
             rid = self._next_id
             self._next_id += 1
             self._futures[rid] = fut
-        frame = {"op": "partition", "id": rid,
-                 "request": protocol.encode_request(request),
-                 "priority": priority, "deadline_s": deadline_s,
-                 "timeout_s": timeout_s}
+        frame = {
+            "op": "partition",
+            "id": rid,
+            "request": protocol.encode_request(request),
+            "priority": priority,
+            "deadline_s": deadline_s,
+            "timeout_s": timeout_s,
+        }
         try:
             with self._send_lock:
                 send_msg(self._sock, frame)
         except OSError as exc:
             with self._lock:
                 self._futures.pop(rid, None)
-            self._set(fut, protocol.decode_result(protocol.error_result(
-                protocol.ERR_CONNECTION, f"send failed: {exc}")))
+            res = protocol.error_result(
+                protocol.ERR_CONNECTION, f"send failed: {exc}"
+            )
+            self._set(fut, protocol.decode_result(res))
         return fut
 
     def serve(self, requests: Iterable, **submit_kw) -> List[FabricResult]:
@@ -129,8 +147,7 @@ class FabricClient:
         self.close()
 
 
-def status_of(host: str, port: int, timeout: float = 10.0
-              ) -> Dict[str, Any]:
+def status_of(host: str, port: int, timeout: float = 10.0) -> Dict[str, Any]:
     """One-shot status query against a front door."""
     sock = protocol.connect(host, port, timeout=timeout)
     try:
@@ -138,7 +155,8 @@ def status_of(host: str, port: int, timeout: float = 10.0
         resp = recv_msg(sock)
         if resp is None:
             raise protocol.ProtocolError(
-                "front door closed before replying to status")
+                "front door closed before replying to status"
+            )
         return resp
     finally:
         sock.close()

@@ -41,8 +41,13 @@ from ..api.backends import required_devices
 from ..serve.metrics import ServeMetrics
 from ..serve.queue import AdmissionQueue, Ticket
 from ..serve.scheduler import pick_server
-from ..serve.server import (ERR_CLOSED, ERR_DEADLINE, ERR_NO_WORKER,
-                            ERR_REJECTED, ERR_WORKER)
+from ..serve.server import (
+    ERR_CLOSED,
+    ERR_DEADLINE,
+    ERR_NO_WORKER,
+    ERR_REJECTED,
+    ERR_WORKER,
+)
 from . import protocol
 from .autoscaler import AutoscaleConfig, AutoscalePolicy, ProcessScaler
 from .protocol import recv_msg, send_msg
@@ -97,11 +102,17 @@ class FrontDoor:
         appended automatically.
     """
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
-                 lease_ttl_s: float = 5.0, max_queue: int = 1024,
-                 max_retries: int = 1,
-                 autoscale: Optional[AutoscaleConfig] = None,
-                 worker_args: Optional[Sequence[str]] = None):
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        lease_ttl_s: float = 5.0,
+        max_queue: int = 1024,
+        max_retries: int = 1,
+        autoscale: Optional[AutoscaleConfig] = None,
+        worker_args: Optional[Sequence[str]] = None,
+    ):
         self.registry = ServerRegistry(ttl_s=lease_ttl_s)
         self._queue = AdmissionQueue(capacity=max_queue)
         self._metrics = ServeMetrics(0)
@@ -129,17 +140,29 @@ class FrontDoor:
             self._scaler = ProcessScaler(worker_args=args)
 
         self._threads = [
-            threading.Thread(target=self._accept_loop,
-                             name="repro-fabric-fd-accept", daemon=True),
-            threading.Thread(target=self._dispatch_loop,
-                             name="repro-fabric-fd-dispatch", daemon=True),
-            threading.Thread(target=self._expiry_loop,
-                             name="repro-fabric-fd-expiry", daemon=True),
+            threading.Thread(
+                target=self._accept_loop,
+                name="repro-fabric-fd-accept",
+                daemon=True,
+            ),
+            threading.Thread(
+                target=self._dispatch_loop,
+                name="repro-fabric-fd-dispatch",
+                daemon=True,
+            ),
+            threading.Thread(
+                target=self._expiry_loop,
+                name="repro-fabric-fd-expiry",
+                daemon=True,
+            ),
         ]
         if self._policy is not None:
-            self._threads.append(threading.Thread(
+            scaler_thread = threading.Thread(
                 target=self._autoscale_loop,
-                name="repro-fabric-fd-autoscale", daemon=True))
+                name="repro-fabric-fd-autoscale",
+                daemon=True,
+            )
+            self._threads.append(scaler_thread)
         for t in self._threads:
             t.start()
 
@@ -154,8 +177,12 @@ class FrontDoor:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             with self._conns_lock:
                 self._conns.add(conn)
-            threading.Thread(target=self._conn_loop, args=(conn,),
-                             daemon=True).start()
+            t = threading.Thread(
+                target=self._conn_loop,
+                args=(conn,),
+                daemon=True,
+            )
+            t.start()
 
     def _conn_loop(self, conn: socket.socket) -> None:
         """One inbound connection: clients (partition/status) and worker
@@ -187,12 +214,14 @@ class FrontDoor:
         elif op == "renew":
             sid = msg.get("server_id", "")
             if self.registry.renew(sid, metrics=msg.get("metrics")):
-                self._safe_send(conn, send_lock, {
-                    "op": "lease", "server_id": sid,
-                    "ttl_s": self.registry.ttl_s})
+                resp = {
+                    "op": "lease",
+                    "server_id": sid,
+                    "ttl_s": self.registry.ttl_s,
+                }
             else:
-                self._safe_send(conn, send_lock, {
-                    "op": "unknown_server", "server_id": sid})
+                resp = {"op": "unknown_server", "server_id": sid}
+            self._safe_send(conn, send_lock, resp)
         elif op == "deregister":
             sid = msg.get("server_id", "")
             self.registry.deregister(sid)
@@ -203,13 +232,12 @@ class FrontDoor:
                 # frames (the worker drains before saying goodbye);
                 # anything still pending rides the failover path
                 self._on_server_lost(handle, "server deregistered")
-            self._safe_send(conn, send_lock, {"op": "bye",
-                                              "server_id": sid})
+            self._safe_send(conn, send_lock, {"op": "bye", "server_id": sid})
         elif op == "status":
             self._safe_send(conn, send_lock, self.status())
         else:
-            self._safe_send(conn, send_lock,
-                            {"op": "error", "detail": f"unknown op {op!r}"})
+            resp = {"op": "error", "detail": f"unknown op {op!r}"}
+            self._safe_send(conn, send_lock, resp)
 
     @staticmethod
     def _safe_send(conn, send_lock, obj: Dict[str, Any]) -> None:
@@ -226,22 +254,31 @@ class FrontDoor:
         try:
             record = self.registry.register(
                 server_id=str(info["server_id"]),
-                host=str(info["host"]), port=int(info["port"]),
+                host=str(info["host"]),
+                port=int(info["port"]),
                 devices=int(info.get("devices", 1)),
                 meshes=int(info.get("meshes", 1)),
-                pid=info.get("pid"))
+                pid=info.get("pid"),
+            )
         except (KeyError, TypeError, ValueError) as exc:
-            self._safe_send(conn, send_lock, {
-                "op": "error", "detail": f"bad register: {exc}"})
+            resp = {"op": "error", "detail": f"bad register: {exc}"}
+            self._safe_send(conn, send_lock, resp)
             return
-        self._safe_send(conn, send_lock, {
-            "op": "lease", "server_id": record.server_id,
-            "ttl_s": self.registry.ttl_s})
+        resp = {
+            "op": "lease",
+            "server_id": record.server_id,
+            "ttl_s": self.registry.ttl_s,
+        }
+        self._safe_send(conn, send_lock, resp)
         # dial the work connection outside the registry lock; a
         # re-registration (restarted worker, new generation) replaces
         # any stale handle, failing its orphans over
-        threading.Thread(target=self._ensure_handle, args=(record,),
-                         daemon=True).start()
+        t = threading.Thread(
+            target=self._ensure_handle,
+            args=(record,),
+            daemon=True,
+        )
+        t.start()
 
     def _ensure_handle(self, record) -> None:
         with self._cond:
@@ -264,21 +301,31 @@ class FrontDoor:
                 handle.alive = False
             else:
                 self._handles[record.server_id] = handle
-                self._sid_index.setdefault(record.server_id,
-                                           len(self._sid_index))
+                self._sid_index.setdefault(
+                    record.server_id, len(self._sid_index)
+                )
             self._cond.notify_all()
         if not handle.alive:
             sock.close()
             return
-        threading.Thread(target=self._recv_loop, args=(handle,),
-                         daemon=True).start()
+        t = threading.Thread(
+            target=self._recv_loop,
+            args=(handle,),
+            daemon=True,
+        )
+        t.start()
 
     @staticmethod
     def _log_unreachable(record, exc) -> None:
         import logging
+
         logging.getLogger(__name__).warning(
             "fabric: server %s advertised %s:%d but is unreachable (%s)",
-            record.server_id, record.host, record.port, exc)
+            record.server_id,
+            record.host,
+            record.port,
+            exc,
+        )
 
     def _recv_loop(self, handle: _ServerHandle) -> None:
         """Match ``result`` frames back to pending tickets; any
@@ -296,9 +343,14 @@ class FrontDoor:
 
     # -- admission -----------------------------------------------------
 
-    def submit(self, request, *, priority: int = 0,
-               deadline_s: Optional[float] = None,
-               timeout_s: Optional[float] = None) -> "Future[dict]":
+    def submit(
+        self,
+        request,
+        *,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
+        timeout_s: Optional[float] = None,
+    ) -> "Future[dict]":
         """Local (in-process) admission — the transport-free core the
         RPC ``partition`` op rides on. Resolves to a *wire dict* (see
         ``protocol.decode_result`` for the typed client view)."""
@@ -312,18 +364,23 @@ class FrontDoor:
             seq = self._seq
             self._seq += 1
         ticket = Ticket(
-            request=request, priority=priority, seq=seq, future=fut,
+            request=request,
+            priority=priority,
+            seq=seq,
+            future=fut,
             submit_t=now,
             deadline=None if deadline_s is None else now + deadline_s,
-            timeout_s=timeout_s, need=need)
+            timeout_s=timeout_s,
+            need=need,
+        )
         if not self._queue.put(ticket):
             code = ERR_CLOSED if self._closing.is_set() else ERR_REJECTED
             if code == ERR_REJECTED:
                 self._metrics.on_reject()
-            detail = ("front door closed during submit"
-                      if code == ERR_CLOSED else
-                      f"admission queue full (capacity "
-                      f"{self._queue.capacity})")
+                cap = self._queue.capacity
+                detail = f"admission queue full (capacity {cap})"
+            else:
+                detail = "front door closed during submit"
             fut.set_result(protocol.error_result(code, detail))
             return fut
         self._metrics.on_submit(self._queue.depth())
@@ -335,15 +392,17 @@ class FrontDoor:
         rid = msg.get("id")
 
         def reply(wire: Dict[str, Any]) -> None:
-            self._safe_send(conn, send_lock,
-                            {"op": "result", "id": rid, "result": wire})
+            frame = {"op": "result", "id": rid, "result": wire}
+            self._safe_send(conn, send_lock, frame)
 
         try:
             req = protocol.decode_request(msg["request"])
             fut = self.submit(
-                req, priority=int(msg.get("priority", 0)),
+                req,
+                priority=int(msg.get("priority", 0)),
                 deadline_s=msg.get("deadline_s"),
-                timeout_s=msg.get("timeout_s"))
+                timeout_s=msg.get("timeout_s"),
+            )
         except protocol.ProtocolError as exc:  # bad frame is data
             reply(protocol.error_result(ERR_REJECTED, str(exc)))
             return
@@ -351,8 +410,8 @@ class FrontDoor:
             reply(protocol.error_result(ERR_CLOSED, str(exc)))
             return
         except Exception as exc:  # malformed request is data
-            reply(protocol.error_result(
-                ERR_REJECTED, f"{type(exc).__name__}: {exc}"))
+            detail = f"{type(exc).__name__}: {exc}"
+            reply(protocol.error_result(ERR_REJECTED, detail))
             return
         fut.add_done_callback(lambda f: reply(f.result()))
 
@@ -376,25 +435,32 @@ class FrontDoor:
         ticket = self._queue.pop_matching(Ticket.expired)
         if ticket is not None:
             self._metrics.on_dispatch(self._queue.depth())
-            self._resolve_wire(ticket, protocol.error_result(
-                ERR_DEADLINE, "expired in front-door queue",
-                attempts=ticket.attempts))
+            wire = protocol.error_result(
+                ERR_DEADLINE,
+                "expired in front-door queue",
+                attempts=ticket.attempts,
+            )
+            self._resolve_wire(ticket, wire)
             return True
         with self._cond:
             handles = [h for h in self._handles.values() if h.alive]
             alive = {h.sid for h in handles}
             free = {h.sid for h in handles if h.inflight < h.capacity}
         ticket = self._queue.pop_matching(
-            lambda t: bool(t.excluded) and not (alive - t.excluded))
+            lambda t: bool(t.excluded) and not (alive - t.excluded)
+        )
         if ticket is not None:
             detail = "; ".join(ticket.errors) or "no live server"
-            self._resolve_wire(ticket, protocol.error_result(
-                ERR_NO_WORKER, detail, attempts=ticket.attempts))
+            wire = protocol.error_result(
+                ERR_NO_WORKER,
+                detail,
+                attempts=ticket.attempts,
+            )
+            self._resolve_wire(ticket, wire)
             return True
         if not free:
             return False
-        ticket = self._queue.pop_matching(
-            lambda t: bool(free - t.excluded))
+        ticket = self._queue.pop_matching(lambda t: bool(free - t.excluded))
         if ticket is None:
             return False
         self._metrics.on_dispatch(self._queue.depth())
@@ -405,28 +471,41 @@ class FrontDoor:
 
     def _assign_now(self, ticket: Ticket) -> None:
         with self._cond:
-            cands = [h for h in self._handles.values()
-                     if h.alive and h.inflight < h.capacity
-                     and h.sid not in ticket.excluded]
-            views = [SimpleNamespace(sid=h.sid, devices=h.devices,
-                                     inflight=h.inflight, handle=h)
-                     for h in cands]
+            views = []
+            for h in self._handles.values():
+                if not h.alive or h.inflight >= h.capacity:
+                    continue
+                if h.sid in ticket.excluded:
+                    continue
+                view = SimpleNamespace(
+                    sid=h.sid,
+                    devices=h.devices,
+                    inflight=h.inflight,
+                    handle=h,
+                )
+                views.append(view)
             view = pick_server(ticket.need, views)
             if view is None:
                 # the free set changed under us; requeue for re-routing
                 if not self._queue.requeue(ticket):
-                    self._resolve_wire(ticket, protocol.error_result(
-                        ERR_CLOSED, "front door closed during dispatch",
-                        attempts=ticket.attempts))
+                    wire = protocol.error_result(
+                        ERR_CLOSED,
+                        "front door closed during dispatch",
+                        attempts=ticket.attempts,
+                    )
+                    self._resolve_wire(ticket, wire)
                 return
             chosen: _ServerHandle = view.handle
             chosen.inflight += 1
             chosen.pending[ticket.seq] = ticket
-        frame = {"op": "partition", "id": ticket.seq,
-                 "request": protocol.encode_request(ticket.request),
-                 "priority": ticket.priority,
-                 "deadline_s": ticket.remaining(),
-                 "timeout_s": ticket.timeout_s}
+        frame = {
+            "op": "partition",
+            "id": ticket.seq,
+            "request": protocol.encode_request(ticket.request),
+            "priority": ticket.priority,
+            "deadline_s": ticket.remaining(),
+            "timeout_s": ticket.timeout_s,
+        }
         try:
             with chosen.send_lock:
                 send_msg(chosen.sock, frame)
@@ -447,9 +526,8 @@ class FrontDoor:
         if wire.get("ok") or wire.get("error") == ERR_DEADLINE:
             self._resolve_wire(ticket, wire)
         elif wire.get("error") in _RETRYABLE:
-            self._attempt_failed(
-                ticket, handle.sid,
-                f"{wire.get('error')}: {wire.get('detail', '')}")
+            detail = f"{wire.get('error')}: {wire.get('detail', '')}"
+            self._attempt_failed(ticket, handle.sid, detail)
         else:  # unknown error code: surface it as-is, annotated
             self._resolve_wire(ticket, wire)
 
@@ -475,24 +553,28 @@ class FrontDoor:
         for t in orphans:
             self._attempt_failed(t, handle.sid, reason)
 
-    def _attempt_failed(self, ticket: Ticket, sid: str,
-                        detail: str) -> None:
+    def _attempt_failed(self, ticket: Ticket, sid: str, detail: str) -> None:
         """PR 5 supervision at server scope: record, exclude, retry
         while the budget allows — the queue's no-server rule surfaces
         ``no_worker`` if nowhere is left to go."""
         ticket.errors.append(f"server {sid}: {detail}")
         ticket.excluded.add(sid)
         ticket.attempts += 1
-        can_retry = (ticket.attempts <= self._max_retries
-                     and not self._closing.is_set())
+        can_retry = (
+            ticket.attempts <= self._max_retries
+            and not self._closing.is_set()
+        )
         if can_retry and self._queue.requeue(ticket):
             self._metrics.on_retry()
             with self._cond:
                 self._cond.notify_all()
             return
-        self._resolve_wire(ticket, protocol.error_result(
-            ERR_WORKER, "; ".join(ticket.errors),
-            attempts=ticket.attempts))
+        wire = protocol.error_result(
+            ERR_WORKER,
+            "; ".join(ticket.errors),
+            attempts=ticket.attempts,
+        )
+        self._resolve_wire(ticket, wire)
 
     def _resolve_wire(self, ticket: Ticket, wire: Dict[str, Any]) -> None:
         """Annotate with front-door timings/attempts and resolve."""
@@ -506,8 +588,12 @@ class FrontDoor:
         sid = wire.get("server")
         widx = self._sid_index.get(sid) if sid is not None else None
         self._metrics.on_done(
-            bool(wire.get("ok")), total, qw, widx,
-            expired=wire.get("error") == ERR_DEADLINE)
+            bool(wire.get("ok")),
+            total,
+            qw,
+            widx,
+            expired=wire.get("error") == ERR_DEADLINE,
+        )
         try:
             ticket.future.set_result(wire)
         except Exception:
@@ -525,7 +611,8 @@ class FrontDoor:
                     self._on_server_lost(
                         handle,
                         f"lease expired after {self.registry.ttl_s:.1f}s "
-                        "without a heartbeat")
+                        "without a heartbeat",
+                    )
 
     def _autoscale_loop(self) -> None:
         policy, scaler = self._policy, self._scaler
@@ -533,13 +620,17 @@ class FrontDoor:
         while not self._closing.wait(period):
             win = self._metrics.snapshot_window()
             with self._cond:
-                inflight = sum(h.inflight for h in self._handles.values()
-                               if h.alive)
+                inflight = sum(
+                    h.inflight for h in self._handles.values() if h.alive
+                )
             workers = max(len(self.registry.alive()), scaler.count())
             act = policy.observe(
-                workers=workers, queue_depth=self._queue.depth(),
+                workers=workers,
+                queue_depth=self._queue.depth(),
                 deadline_misses=win["expired"],
-                submitted=win["submitted"], inflight=inflight)
+                submitted=win["submitted"],
+                inflight=inflight,
+            )
             if act > 0 or workers < policy.cfg.min_workers:
                 scaler.scale_up()
             elif act < 0:
@@ -548,23 +639,32 @@ class FrontDoor:
     # -- introspection / lifecycle -------------------------------------
 
     def status(self) -> Dict[str, Any]:
+        per_server: Dict[str, Dict[str, Any]] = {}
         with self._cond:
-            per_server = {h.sid: {"inflight": h.inflight,
-                                  "pending": len(h.pending),
-                                  "alive": h.alive}
-                          for h in self._handles.values()}
+            for h in self._handles.values():
+                per_server[h.sid] = {
+                    "inflight": h.inflight,
+                    "pending": len(h.pending),
+                    "alive": h.alive,
+                }
         servers: List[Dict[str, Any]] = []
         for rec in self.registry.alive():
             row = rec.summary()
             row.update(per_server.get(rec.server_id, {}))
             servers.append(row)
-        out = {"op": "status", "host": self.host, "port": self.port,
-               "servers": servers, "queue_depth": self._queue.depth(),
-               "metrics": self._metrics.snapshot()}
+        out = {
+            "op": "status",
+            "host": self.host,
+            "port": self.port,
+            "servers": servers,
+            "queue_depth": self._queue.depth(),
+            "metrics": self._metrics.snapshot(),
+        }
         if self._scaler is not None:
             out["autoscaler"] = {
                 "procs": self._scaler.count(),
-                "config": dataclasses.asdict(self._policy.cfg)}
+                "config": dataclasses.asdict(self._policy.cfg),
+            }
         return out
 
     def close(self) -> None:
@@ -576,9 +676,12 @@ class FrontDoor:
         self._closing.set()
         self._queue.close()
         for t in self._queue.drain():
-            self._resolve_wire(t, protocol.error_result(
-                ERR_CLOSED, "front door closed before dispatch",
-                attempts=t.attempts))
+            wire = protocol.error_result(
+                ERR_CLOSED,
+                "front door closed before dispatch",
+                attempts=t.attempts,
+            )
+            self._resolve_wire(t, wire)
         try:
             self._listener.close()
         except OSError:
@@ -593,8 +696,12 @@ class FrontDoor:
                 h.alive = False
                 self._handles.pop(h.sid, None)
             for t in orphans:
-                self._resolve_wire(t, protocol.error_result(
-                    ERR_CLOSED, "front door closed", attempts=t.attempts))
+                wire = protocol.error_result(
+                    ERR_CLOSED,
+                    "front door closed",
+                    attempts=t.attempts,
+                )
+                self._resolve_wire(t, wire)
             try:
                 h.sock.close()
             except OSError:

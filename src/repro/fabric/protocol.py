@@ -85,8 +85,11 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
     return bytes(buf)
 
 
-def connect(host: str, port: int, timeout: Optional[float] = None
-            ) -> socket.socket:
+def connect(
+    host: str,
+    port: int,
+    timeout: Optional[float] = None,
+) -> socket.socket:
     """Dial a fabric endpoint (TCP_NODELAY — frames are small and
     latency-sensitive; the payload b64 dominates large ones anyway)."""
     sock = socket.create_connection((host, port), timeout=timeout)
@@ -101,36 +104,47 @@ def connect(host: str, port: int, timeout: Optional[float] = None
 
 def encode_array(a: np.ndarray) -> Dict[str, Any]:
     a = np.ascontiguousarray(a)
-    return {"b64": base64.b64encode(a.tobytes()).decode("ascii"),
-            "dtype": str(a.dtype), "shape": list(a.shape)}
+    return {
+        "b64": base64.b64encode(a.tobytes()).decode("ascii"),
+        "dtype": str(a.dtype),
+        "shape": list(a.shape),
+    }
 
 
 def decode_array(d: Dict[str, Any]) -> np.ndarray:
     raw = base64.b64decode(d["b64"])
-    return np.frombuffer(raw, dtype=np.dtype(d["dtype"])) \
-        .reshape(d["shape"]).copy()
+    arr = np.frombuffer(raw, dtype=np.dtype(d["dtype"]))
+    return arr.reshape(d["shape"]).copy()
 
 
 def encode_request(req) -> Dict[str, Any]:
     """``PartitionRequest`` -> wire dict (lossless)."""
     from ..api.request import GraphSpec
+
     g = req.graph
     if isinstance(g, GraphSpec):
-        graph = {"kind": "spec", "family": g.family, "n": g.n,
-                 "avg_deg": g.avg_deg, "seed": g.seed}
+        graph = {
+            "kind": "spec",
+            "family": g.family,
+            "n": g.n,
+            "avg_deg": g.avg_deg,
+            "seed": g.seed,
+        }
     else:
-        graph = {"kind": "graph",
-                 "indptr": encode_array(g.indptr),
-                 "adjncy": encode_array(g.adjncy),
-                 "eweights": encode_array(g.eweights),
-                 "vweights": encode_array(g.vweights)}
+        graph = {
+            "kind": "graph",
+            "indptr": encode_array(g.indptr),
+            "adjncy": encode_array(g.adjncy),
+            "eweights": encode_array(g.eweights),
+            "vweights": encode_array(g.vweights),
+        }
+    cfg = None if req.config is None else dataclasses.asdict(req.config)
     return {
         "graph": graph,
         "k": req.k,
         "epsilon": req.epsilon,
         "preset": req.preset,
-        "config": None if req.config is None
-        else dataclasses.asdict(req.config),
+        "config": cfg,
         "seed": req.seed,
         "backend": req.backend,
         "devices": req.devices,
@@ -146,15 +160,22 @@ def decode_request(d: Dict[str, Any]):
     from ..core.deep_mgp import PartitionerConfig
     from ..graphs.format import Graph
     from ..api.request import GraphSpec, PartitionRequest
+
     g = d["graph"]
     if g["kind"] == "spec":
-        graph = GraphSpec(family=g["family"], n=int(g["n"]),
-                          avg_deg=float(g["avg_deg"]), seed=int(g["seed"]))
+        graph = GraphSpec(
+            family=g["family"],
+            n=int(g["n"]),
+            avg_deg=float(g["avg_deg"]),
+            seed=int(g["seed"]),
+        )
     elif g["kind"] == "graph":
-        graph = Graph(indptr=decode_array(g["indptr"]),
-                      adjncy=decode_array(g["adjncy"]),
-                      eweights=decode_array(g["eweights"]),
-                      vweights=decode_array(g["vweights"]))
+        graph = Graph(
+            indptr=decode_array(g["indptr"]),
+            adjncy=decode_array(g["adjncy"]),
+            eweights=decode_array(g["eweights"]),
+            vweights=decode_array(g["vweights"]),
+        )
     else:
         raise ProtocolError(f"unknown graph kind {g.get('kind')!r}")
     cfg = d.get("config")
@@ -189,8 +210,7 @@ def _jsonable(x):
     return x
 
 
-def encode_serve_result(sr, server_id: Optional[str] = None
-                        ) -> Dict[str, Any]:
+def encode_serve_result(sr, server_id: Optional[str] = None) -> Dict[str, Any]:
     """``repro.serve.ServeResult`` -> wire dict, carrying the assignment
     so clients can assert bit-identity against solo runs."""
     out: Dict[str, Any] = {
@@ -206,14 +226,16 @@ def encode_serve_result(sr, server_id: Optional[str] = None
     }
     if sr.ok and sr.result is not None:
         r = sr.result
-        out.update({
-            "assignment": encode_array(r.assignment),
-            "cut": int(r.cut),
-            "feasible": bool(r.feasible),
-            "backend": r.backend,
-            "time_s": float(r.time_s),
-            "metrics": _jsonable(r.metrics),
-        })
+        out.update(
+            {
+                "assignment": encode_array(r.assignment),
+                "cut": int(r.cut),
+                "feasible": bool(r.feasible),
+                "backend": r.backend,
+                "time_s": float(r.time_s),
+                "metrics": _jsonable(r.metrics),
+            }
+        )
     return out
 
 
@@ -236,12 +258,20 @@ class FabricResult:
     metrics: Optional[Dict[str, Any]] = None
 
     def summary(self) -> Dict[str, Any]:
-        out: Dict[str, Any] = {"ok": self.ok, "server": self.server,
-                               "attempts": self.attempts}
+        out: Dict[str, Any] = {
+            "ok": self.ok,
+            "server": self.server,
+            "attempts": self.attempts,
+        }
         if self.ok:
-            out.update({"cut": self.cut, "feasible": self.feasible,
-                        "backend": self.backend,
-                        "time_s": round(self.time_s, 4)})
+            out.update(
+                {
+                    "cut": self.cut,
+                    "feasible": self.feasible,
+                    "backend": self.backend,
+                    "time_s": round(self.time_s, 4),
+                }
+            )
         else:
             out.update({"error": self.error, "detail": self.detail})
         return out
@@ -265,9 +295,16 @@ def decode_result(d: Dict[str, Any]) -> FabricResult:
     )
 
 
-def error_result(code: str, detail: str, attempts: int = 0
-                 ) -> Dict[str, Any]:
+def error_result(code: str, detail: str, attempts: int = 0) -> Dict[str, Any]:
     """Wire dict for a front-door-synthesized structured error."""
-    return {"ok": False, "error": code, "detail": detail, "server": None,
-            "worker": None, "attempts": attempts, "priority": 0,
-            "queue_wait_s": 0.0, "total_s": 0.0}
+    return {
+        "ok": False,
+        "error": code,
+        "detail": detail,
+        "server": None,
+        "worker": None,
+        "attempts": attempts,
+        "priority": 0,
+        "queue_wait_s": 0.0,
+        "total_s": 0.0,
+    }

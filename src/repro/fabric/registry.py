@@ -56,8 +56,11 @@ class ServerRegistry:
     doesn't flap the server out of rotation.
     """
 
-    def __init__(self, ttl_s: float = 5.0,
-                 clock: Callable[[], float] = time.monotonic):
+    def __init__(
+        self,
+        ttl_s: float = 5.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         if ttl_s <= 0:
             raise ValueError(f"ttl_s must be > 0, got {ttl_s}")
         self.ttl_s = ttl_s
@@ -67,9 +70,16 @@ class ServerRegistry:
 
     # -- lease lifecycle -----------------------------------------------
 
-    def register(self, server_id: str, host: str, port: int, *,
-                 devices: int = 1, meshes: int = 1,
-                 pid: Optional[int] = None) -> ServerRecord:
+    def register(
+        self,
+        server_id: str,
+        host: str,
+        port: int,
+        *,
+        devices: int = 1,
+        meshes: int = 1,
+        pid: Optional[int] = None,
+    ) -> ServerRecord:
         """Admit (or re-admit) a server; returns the new record (its
         lease runs ``ttl_s`` from now).
 
@@ -83,15 +93,24 @@ class ServerRegistry:
         with self._lock:
             old = self._records.get(server_id)
             rec = ServerRecord(
-                server_id=server_id, host=host, port=int(port),
-                devices=int(devices), meshes=int(meshes), pid=pid,
-                lease_expiry=now + self.ttl_s, registered_t=now,
-                generation=(old.generation + 1) if old else 0)
+                server_id=server_id,
+                host=host,
+                port=int(port),
+                devices=int(devices),
+                meshes=int(meshes),
+                pid=pid,
+                lease_expiry=now + self.ttl_s,
+                registered_t=now,
+                generation=(old.generation + 1) if old else 0,
+            )
             self._records[server_id] = rec
         return rec
 
-    def renew(self, server_id: str,
-              metrics: Optional[Dict[str, Any]] = None) -> bool:
+    def renew(
+        self,
+        server_id: str,
+        metrics: Optional[Dict[str, Any]] = None,
+    ) -> bool:
         """Extend a live lease; False when the id is unknown or already
         expired — the worker's cue to re-register (its old record may
         have been expired and its tickets already re-routed)."""
@@ -117,8 +136,9 @@ class ServerRegistry:
         in-flight tickets over, exactly like a dropped connection."""
         now = self._clock() if now is None else now
         with self._lock:
-            dead = [r for r in self._records.values()
-                    if r.lease_expiry <= now]
+            dead = [
+                r for r in self._records.values() if r.lease_expiry <= now
+            ]
             for r in dead:
                 del self._records[r.server_id]
             return dead
@@ -131,8 +151,8 @@ class ServerRegistry:
         path runs in exactly one place."""
         now = self._clock()
         with self._lock:
-            return [r for _, r in sorted(self._records.items())
-                    if r.lease_expiry > now]
+            recs = sorted(self._records.items())
+            return [r for _, r in recs if r.lease_expiry > now]
 
     def get(self, server_id: str) -> Optional[ServerRecord]:
         with self._lock:

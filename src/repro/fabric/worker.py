@@ -52,20 +52,32 @@ class FabricWorker:
         door's lease TTL so one dropped beat doesn't expire the lease.
     """
 
-    def __init__(self, frontdoor: Optional[Tuple[str, int]] = None, *,
-                 host: str = "127.0.0.1", port: int = 0,
-                 server_id: Optional[str] = None, meshes: int = 1,
-                 devices_per_mesh: int = 1, backend: Optional[str] = None,
-                 heartbeat_s: float = 1.0, server=None,
-                 max_queue: int = 1024):
+    def __init__(
+        self,
+        frontdoor: Optional[Tuple[str, int]] = None,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        server_id: Optional[str] = None,
+        meshes: int = 1,
+        devices_per_mesh: int = 1,
+        backend: Optional[str] = None,
+        heartbeat_s: float = 1.0,
+        server=None,
+        max_queue: int = 1024,
+    ):
         self.server_id = server_id or f"worker-{os.getpid()}"
         self._frontdoor = frontdoor
         self._heartbeat_s = heartbeat_s
         if server is None:
             from ..serve import PartitionServer
-            server = PartitionServer(meshes=meshes,
-                                     devices_per_mesh=devices_per_mesh,
-                                     backend=backend, max_queue=max_queue)
+
+            server = PartitionServer(
+                meshes=meshes,
+                devices_per_mesh=devices_per_mesh,
+                backend=backend,
+                max_queue=max_queue,
+            )
         self._server = server
         self.devices_per_mesh = getattr(server, "devices_per_mesh", 1)
         self.meshes = len(getattr(server, "workers", [])) or 1
@@ -81,14 +93,18 @@ class FabricWorker:
         self._listener.listen(64)
         self.host, self.port = self._listener.getsockname()[:2]
         self._accept_thread = threading.Thread(
-            target=self._accept_loop, name="repro-fabric-accept",
-            daemon=True)
+            target=self._accept_loop,
+            name="repro-fabric-accept",
+            daemon=True,
+        )
         self._accept_thread.start()
         self._hb_thread: Optional[threading.Thread] = None
         if frontdoor is not None:
             self._hb_thread = threading.Thread(
-                target=self._heartbeat_loop, name="repro-fabric-heartbeat",
-                daemon=True)
+                target=self._heartbeat_loop,
+                name="repro-fabric-heartbeat",
+                daemon=True,
+            )
             self._hb_thread.start()
 
     # -- RPC serving ---------------------------------------------------
@@ -102,8 +118,12 @@ class FabricWorker:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             with self._conns_lock:
                 self._conns.add(conn)
-            threading.Thread(target=self._conn_loop, args=(conn,),
-                             daemon=True).start()
+            t = threading.Thread(
+                target=self._conn_loop,
+                args=(conn,),
+                daemon=True,
+            )
+            t.start()
 
     def _conn_loop(self, conn: socket.socket) -> None:
         send_lock = threading.Lock()
@@ -128,37 +148,42 @@ class FabricWorker:
         if op == "partition":
             self._handle_partition(conn, send_lock, msg)
         elif op in ("ping", "status"):
-            self._send(conn, send_lock, {
-                "op": "pong", "server_id": self.server_id,
+            resp = {
+                "op": "pong",
+                "server_id": self.server_id,
                 "draining": self._draining.is_set(),
-                "stats": self._server.stats()})
+                "stats": self._server.stats(),
+            }
+            self._send(conn, send_lock, resp)
         elif op == "drain":
-            self._send(conn, send_lock, {"op": "draining",
-                                         "server_id": self.server_id})
+            resp = {"op": "draining", "server_id": self.server_id}
+            self._send(conn, send_lock, resp)
             threading.Thread(target=self.drain, daemon=True).start()
         else:
-            self._send(conn, send_lock,
-                       {"op": "error", "detail": f"unknown op {op!r}"})
+            resp = {"op": "error", "detail": f"unknown op {op!r}"}
+            self._send(conn, send_lock, resp)
 
-    def _handle_partition(self, conn, send_lock,
-                          msg: Dict[str, Any]) -> None:
+    def _handle_partition(self, conn, send_lock, msg: Dict[str, Any]) -> None:
         rid = msg.get("id")
 
         def reply_error(code: str, detail: str) -> None:
-            self._send(conn, send_lock, {
-                "op": "result", "id": rid,
-                "result": protocol.error_result(code, detail)})
+            res = protocol.error_result(code, detail)
+            frame = {"op": "result", "id": rid, "result": res}
+            self._send(conn, send_lock, frame)
 
         if self._draining.is_set():
-            reply_error("server_closed",
-                        f"worker {self.server_id} is draining")
+            reply_error(
+                "server_closed", f"worker {self.server_id} is draining"
+            )
             return
         try:
             req = protocol.decode_request(msg["request"])
             fut = self._server.submit(
-                req, priority=int(msg.get("priority", 0)),
+                req,
+                priority=int(msg.get("priority", 0)),
                 deadline_s=msg.get("deadline_s"),
-                timeout_s=msg.get("timeout_s"))
+                timeout_s=msg.get("timeout_s"),
+            )
         except protocol.ProtocolError as exc:  # bad frame is data
             reply_error("rejected", str(exc))
             return
@@ -171,13 +196,14 @@ class FabricWorker:
 
         def on_done(f) -> None:
             try:
-                wire = protocol.encode_serve_result(
-                    f.result(), self.server_id)
+                sr = f.result()
+                wire = protocol.encode_serve_result(sr, self.server_id)
             except Exception as exc:
                 wire = protocol.error_result(
-                    "worker_failed", f"{type(exc).__name__}: {exc}")
-            self._send(conn, send_lock,
-                       {"op": "result", "id": rid, "result": wire})
+                    "worker_failed", f"{type(exc).__name__}: {exc}"
+                )
+            frame = {"op": "result", "id": rid, "result": wire}
+            self._send(conn, send_lock, frame)
 
         fut.add_done_callback(on_done)
 
@@ -191,11 +217,15 @@ class FabricWorker:
     # -- heartbeats ----------------------------------------------------
 
     def _register_msg(self) -> Dict[str, Any]:
-        return {"op": "register",
-                "server": {"server_id": self.server_id,
-                           "host": self.host, "port": self.port,
-                           "devices": self.devices_per_mesh,
-                           "meshes": self.meshes, "pid": os.getpid()}}
+        server = {
+            "server_id": self.server_id,
+            "host": self.host,
+            "port": self.port,
+            "devices": self.devices_per_mesh,
+            "meshes": self.meshes,
+            "pid": os.getpid(),
+        }
+        return {"op": "register", "server": server}
 
     def _heartbeat_loop(self) -> None:
         """Register, then renew every beat; reconnect (and re-register)
@@ -216,9 +246,12 @@ class FabricWorker:
                 recv_msg(sock)  # lease ack
                 backoff = 0.2
                 while not self._drained.wait(self._heartbeat_s):
-                    send_msg(sock, {
-                        "op": "renew", "server_id": self.server_id,
-                        "metrics": self._server.metrics_window()})
+                    frame = {
+                        "op": "renew",
+                        "server_id": self.server_id,
+                        "metrics": self._server.metrics_window(),
+                    }
+                    send_msg(sock, frame)
                     resp = recv_msg(sock)
                     if resp is None:
                         raise OSError("front door closed the connection")
@@ -227,8 +260,8 @@ class FabricWorker:
                         # front-door restart): re-register on the spot
                         send_msg(sock, self._register_msg())
                         recv_msg(sock)
-                send_msg(sock, {"op": "deregister",
-                                "server_id": self.server_id})
+                bye = {"op": "deregister", "server_id": self.server_id}
+                send_msg(sock, bye)
                 return
             except (OSError, protocol.ProtocolError):
                 time.sleep(backoff)

@@ -20,6 +20,8 @@ is safe because both paths are bit-identical by construction.
 from __future__ import annotations
 
 import functools
+import warnings
+from typing import Dict, List
 
 KERNEL_MODES = ("auto", "fused", "composed")
 
@@ -58,3 +60,49 @@ def fits_vmem(*arrays_bytes: int, budget: int = VMEM_BUDGET_BYTES) -> bool:
     """Whole-chunk kernels keep every operand resident in VMEM; callers
     sum their operand footprints and fall back to composed beyond this."""
     return sum(arrays_bytes) <= budget
+
+
+# --- fallback observability -------------------------------------------
+# A fused wrapper that falls back to the composed path is *correct* but
+# silently loses the kernel speedup; callers used to find out only by
+# profiling. Decision sites call ``report_fallback`` so the drivers can
+# drain ``kernel-fallback`` records into the run trace, and the first
+# fallback per kernel raises a one-shot ``UserWarning``.
+
+_fallback_records: List[Dict] = []
+_fallback_warned: set = set()
+
+
+def report_fallback(kernel: str, estimated_bytes: int,
+                    budget: int = VMEM_BUDGET_BYTES,
+                    detail: str = "") -> None:
+    """Record one fused->composed fallback decision."""
+    _fallback_records.append({
+        "event": "kernel-fallback",
+        "kernel": kernel,
+        "estimated_bytes": int(estimated_bytes),
+        "budget_bytes": int(budget),
+        "detail": detail,
+    })
+    if kernel not in _fallback_warned:
+        _fallback_warned.add(kernel)
+        warnings.warn(
+            f"fused kernel {kernel!r} fell back to the composed path: "
+            f"estimated working set {int(estimated_bytes)} B exceeds "
+            f"the {int(budget)} B VMEM budget ({detail or 'no detail'})"
+            "; results are identical but the kernel speedup is lost "
+            "(warning once per kernel)",
+            UserWarning, stacklevel=3)
+
+
+def drain_fallback_records() -> List[Dict]:
+    """Return-and-clear the pending ``kernel-fallback`` records."""
+    records = list(_fallback_records)
+    _fallback_records.clear()
+    return records
+
+
+def reset_fallback_state() -> None:
+    """Forget pending records and re-arm the one-shot warnings."""
+    _fallback_records.clear()
+    _fallback_warned.clear()

@@ -47,7 +47,7 @@ def main() -> int:
                     choices=["all", "collectives", "halo", "cluster",
                              "contract", "partition", "refine", "balance",
                              "smoke", "api", "serve", "batch", "fabric",
-                             "kernels"])
+                             "kernels", "analysis"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--family", default="rgg2d")
@@ -93,7 +93,8 @@ def main() -> int:
 
         def run(fn):
             f = shard_map(lambda s: fn(s[0])[None], mesh=mesh,
-                          in_specs=PS("pe"), out_specs=PS("pe"))
+                          in_specs=PS("pe"), out_specs=PS("pe"),
+                          check_rep=True)
             return np.asarray(jax.jit(f)(jnp.asarray(slab)))
 
         out_direct = run(lambda s: direct_all_to_all(s, "pe"))
@@ -118,7 +119,8 @@ def main() -> int:
                 lambda v, si, rs: halo_exchange(
                     v[0], si[0], rs[0], n_ghost, "pe", P,
                     use_grid=use_grid)[None],
-                mesh=mesh, in_specs=(PS("pe"),) * 3, out_specs=PS("pe"))
+                mesh=mesh, in_specs=(PS("pe"),) * 3, out_specs=PS("pe"),
+                check_rep=True)
             return np.asarray(jax.jit(fn)(
                 jnp.asarray(vals), jnp.asarray(shards.send_idx),
                 jnp.asarray(shards.recv_slot)))
@@ -543,6 +545,37 @@ def main() -> int:
                    np.array_equal(got["fused"], got["composed"]) and feas,
                    cut=metrics.edge_cut(gk, got["fused"]), P=P,
                    feasible=feas)
+
+    if args.test == "analysis":
+        # not part of "all": each direction re-imports jax in a fresh
+        # subprocess (the verifier forces its own host device count).
+        # The static verifier must pass on the repo as committed AND
+        # fail on every seeded-violation fixture — both directions, or
+        # the CI gate is vacuous (docs/ANALYSIS.md).
+        import os
+        import subprocess
+
+        import repro
+
+        src_dir = os.path.dirname(os.path.dirname(repro.__file__))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_dir + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        env.pop("XLA_FLAGS", None)  # verifier forces its own devices
+
+        def run_analysis(*extra):
+            return subprocess.run(
+                [sys.executable, "-m", "repro.analysis", *extra],
+                capture_output=True, text=True, env=env)
+
+        proc = run_analysis()
+        report("analysis.repo_clean", proc.returncode == 0,
+               tail=proc.stdout.strip().splitlines()[-1:])
+        for fx in ("collective", "overflow", "lint", "vmem"):
+            proc = run_analysis("--fixture", fx)
+            report(f"analysis.fixture_{fx}_fires",
+                   proc.returncode != 0,
+                   tail=proc.stdout.strip().splitlines()[-1:])
 
     if args.test == "fabric":
         # not part of "all": spawns real worker subprocesses (each

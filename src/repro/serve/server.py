@@ -459,7 +459,7 @@ class PartitionServer:
 
     def submit(
         self,
-        request,
+        request: Any,
         *,
         priority: int = 0,
         deadline_s: Optional[float] = None,
