@@ -5,7 +5,11 @@ Runs the same ``PartitionRequest`` against each registered backend via
 {backend: {cut, feasible, time_s}} plus instance metadata — so the perf
 trajectory of the public API is tracked run-over-run. The distributed
 backends run at P=1 in-process (a sharding smoke; multi-device numbers
-come from the scaling section's subprocesses).
+come from the scaling section's subprocesses). A ``refine_pareto``
+section (``benchmarks.quality.refine_pareto``) tracks the cut-vs-time
+trade of ``refine="lp"`` vs ``refine="unconstrained"`` on the quality
+mix; the regression gate requires the unconstrained tier to stay
+feasible with aggregate cut <= LP (docs/REFINEMENT.md).
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ import json
 from typing import Dict
 
 from .common import bench_config, emit
+from .quality import refine_pareto
 
 BACKENDS = ["single", "dist", "dist-grid", "plain_mgp", "single_level_lp"]
 
@@ -35,6 +40,8 @@ def run(fast: bool = True, out_json: str = "BENCH_api.json") -> Dict:
         result["backends"][res.backend] = rec
         emit(f"api/{res.backend}", res.time_s,
              f"cut={res.cut};feas={res.feasible}")
+    result["refine_pareto"] = refine_pareto(
+        scale="small" if fast else "medium", ks=(16,), seeds=(0,))
     if out_json:
         with open(out_json, "w") as f:
             json.dump(result, f, indent=1)

@@ -10,9 +10,11 @@ instead of only uploading artifacts — when:
   * any fresh record is infeasible (``"feasible": false`` anywhere),
     reports failed serve requests, reports batched serve results that
     deviate bit-wise from solo runs (``"bit_identical": false``),
-    reports a ``batch_speedup`` below the 2x floor, or reports a fabric
-    autoscaler that failed to grow under pressure or shrink back when
-    idle (``"grew"``/``"shrank"`` false);
+    reports a ``batch_speedup`` below the 2x floor, reports the
+    unconstrained refinement tier losing to LP on aggregate cut
+    (``"cut_leq_lp"`` false), or reports a fabric autoscaler that
+    failed to grow under pressure or shrink back when idle
+    (``"grew"``/``"shrank"`` false);
   * a ``cut`` regresses by more than ``--tolerance`` (cuts are
     deterministic for fixed seeds, so any growth is a code change);
   * a latency/time metric regresses by more than ``--time-tolerance``
@@ -62,7 +64,7 @@ MIN_BATCH_SPEEDUP = 2.0
 # gate must say *which* section and *which* producer instead of letting
 # a downstream lookup die with a bare KeyError
 EXPECTED_SECTIONS = {
-    "BENCH_api.json": ("instance", "backends"),
+    "BENCH_api.json": ("instance", "backends", "refine_pareto"),
     "BENCH_dist.json": ("modes",),
     "BENCH_balance.json": ("modes", "pipeline"),
     "BENCH_serve.json": ("meshes", "batched", "fabric"),
@@ -182,6 +184,11 @@ def check_invariants(node, path: str, failures: List[str]) -> None:
                 failures.append(
                     f"{sub}: batched dispatch only {val}x solo "
                     f"(< {MIN_BATCH_SPEEDUP}x floor)")
+            elif key == "cut_leq_lp" and val is False:
+                failures.append(
+                    f"{sub}: unconstrained refinement lost to LP on "
+                    "aggregate cut (the tier's extra wall time must buy "
+                    "quality — docs/REFINEMENT.md)")
             elif key == "grew" and val is False:
                 failures.append(f"{sub}: autoscaler never grew the "
                                 "fleet under queue pressure")

@@ -3,6 +3,13 @@ single-level LP across instances x k, with performance profiles.
 
 Claims validated (paper §6): deep MGP is feasible on 100% of instances;
 single-level LP cuts are >= 2x worse on average; deep ~ plain at small k.
+
+Also home to the refinement-tier Pareto sweep (``refine_pareto``):
+cut vs time of ``refine="lp"`` against ``refine="unconstrained"`` on
+the quality mix, emitted into ``BENCH_api.json`` and gated by
+``check_regression`` — the unconstrained tier must stay feasible and
+beat (or match) LP's aggregate cut, or the extra wall time buys
+nothing (docs/REFINEMENT.md).
 """
 from __future__ import annotations
 
@@ -70,6 +77,59 @@ def run(scale: str = "small", ks=(2, 8, 32), seeds=(0, 1), out_json=None
         with open(out_json, "w") as f:
             json.dump(result, f, indent=1)
     return result
+
+
+def refine_pareto(scale: str = "small", ks=(8, 32), seeds=(0,),
+                  families=None) -> Dict:
+    """Cut-vs-time Pareto of the two refinement tiers on the quality
+    mix: the same deep-MGP request run with ``refine="lp"`` and
+    ``refine="unconstrained"`` (docs/REFINEMENT.md).
+
+    Returns per-instance rows plus a summary whose keyed booleans the
+    regression gate enforces: ``feasible`` (both tiers, every
+    instance — the afterburner guarantee) and ``cut_leq_lp`` (the
+    unconstrained tier's geomean cut ratio vs LP stays <= 1, i.e. the
+    extra search actually buys quality)."""
+    from repro.api import PartitionRequest, Partitioner
+    engine = Partitioner()
+    rows = []
+    instances = instance_set(scale)
+    if families is not None:
+        instances = [(nm, g) for nm, g in instances
+                     if nm.split("_")[0] in families]
+    for name, g in instances:
+        for k in ks:
+            for s in seeds:
+                row = {"instance": name, "k": k, "seed": s, "modes": {}}
+                for mode in ("lp", "unconstrained"):
+                    req = PartitionRequest(
+                        graph=g, k=k, config=_with_seed(bench_config(), s),
+                        seed=s, backend="single", refine=mode,
+                        collect_trace=False)
+                    res = engine.run(req)
+                    row["modes"][mode] = {
+                        "cut": res.cut, "feasible": res.feasible,
+                        "time_s": round(float(res.time_s), 4)}
+                    emit(f"quality/refine/{name}/k{k}/{mode}",
+                         res.time_s, f"cut={res.cut};feas={res.feasible}")
+                rows.append(row)
+    ratios = [r["modes"]["unconstrained"]["cut"] /
+              max(r["modes"]["lp"]["cut"], 1) for r in rows]
+    gm = geomean(ratios)
+    time_ratio = geomean(
+        [max(r["modes"]["unconstrained"]["time_s"], 1e-9) /
+         max(r["modes"]["lp"]["time_s"], 1e-9) for r in rows])
+    summary = {
+        "gmean_cut_ratio": round(gm, 4),
+        "gmean_time_ratio": round(time_ratio, 4),
+        "cut_leq_lp": bool(gm <= 1.0 + 1e-9),
+        "feasible": all(m["feasible"] for r in rows
+                        for m in r["modes"].values()),
+    }
+    emit("quality/refine/summary", 0.0,
+         f"gmean_cut_ratio={gm:.4f};cut_leq_lp={summary['cut_leq_lp']};"
+         f"feasible={summary['feasible']}")
+    return {"rows": rows, "summary": summary}
 
 
 def _with_seed(cfg, seed):

@@ -27,6 +27,7 @@ def build_specs(P: int = 2) -> List[Spec]:
     from repro.core import coarsening as c_coarsening
     from repro.core import contraction as c_contraction
     from repro.core import lp as c_lp
+    from repro.core import unconstrained as c_unconstrained
     from repro.core.coarsening import enforce_cluster_weights
     from repro.dist import dist_balance, dist_contraction, dist_lp
     from repro.graphs import generators
@@ -73,6 +74,18 @@ def build_specs(P: int = 2) -> List[Spec]:
             part,
             lvec,
             num_iterations=1,
+            num_chunks=2,
+            seed=0,
+            use_grid=True,
+            weights=weights,
+        )
+
+    def urefine(weights: str):
+        return lambda: dist_lp.dist_ulp_refine(
+            shards,
+            part,
+            lvec,
+            num_iterations=2,
             num_chunks=2,
             seed=0,
             use_grid=True,
@@ -130,6 +143,20 @@ def build_specs(P: int = 2) -> List[Spec]:
             "_build_refine_fn",
             True,
             refine("owner"),
+        ),
+        (
+            "dist_urefine.replicated",
+            dist_lp,
+            "_build_urefine_fn",
+            True,
+            urefine("replicated"),
+        ),
+        (
+            "dist_urefine.owner",
+            dist_lp,
+            "_build_urefine_fn",
+            True,
+            urefine("owner"),
         ),
         (
             "dist_balance.replicated",
@@ -201,6 +228,20 @@ def build_specs(P: int = 2) -> List[Spec]:
                 num_chunks=2,
                 seed=0,
                 kernel="fused",
+            ),
+        ),
+        (
+            "host_urefine",
+            c_unconstrained,
+            "urefine_iteration",
+            False,
+            lambda: c_unconstrained.unconstrained_refine(
+                g,
+                part.copy(),
+                lvec,
+                num_iterations=2,
+                num_chunks=2,
+                seed=0,
             ),
         ),
         (

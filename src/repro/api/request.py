@@ -61,6 +61,13 @@ class PartitionRequest:
     all three. ``kernel`` picks the hot-loop implementation on every
     backend ("auto" | "fused" | "composed", docs/KERNELS.md) — results
     are bit-identical either way.
+
+    ``refine`` selects the refinement algorithm on every backend
+    ("lp" | "unconstrained", docs/REFINEMENT.md); ``quality`` is the
+    serving-facing spelling of the same choice ("fast" -> lp,
+    "best" -> unconstrained) that schedulers may downgrade for
+    deadline-bearing tickets (docs/SERVING.md). An explicit ``refine``
+    always wins over ``quality``.
     """
     graph: Union[Graph, GraphSpec]
     k: int
@@ -76,6 +83,8 @@ class PartitionRequest:
     weights: Optional[str] = None               # "replicated" | "owner"
     balance: Optional[str] = None               # "host" | "dist"
     kernel: Optional[str] = None                # "auto"|"fused"|"composed"
+    refine: Optional[str] = None                # "lp" | "unconstrained"
+    quality: Optional[str] = None               # "fast" | "best"
 
     def validate(self) -> "PartitionRequest":
         from .backends import available_backends
@@ -107,6 +116,12 @@ class PartitionRequest:
         if self.kernel is not None:
             from ..kernels.dispatch import check_kernel_mode
             check_kernel_mode(self.kernel)
+        if self.refine is not None:
+            from ..core.refinement import check_refine_mode
+            check_refine_mode(self.refine)
+        if self.quality not in (None, "fast", "best"):
+            raise ValueError(
+                f"quality must be 'fast' or 'best', got {self.quality!r}")
         if self.config is not None:
             self.config.validate()
         if isinstance(self.graph, GraphSpec):
@@ -120,8 +135,10 @@ class PartitionRequest:
 
     def resolve_config(self) -> PartitionerConfig:
         """Preset (+ epsilon/seed) unless an explicit config was given;
-        request-level ``contraction``/``weights``/``balance`` override
-        either."""
+        request-level ``contraction``/``weights``/``balance``/``kernel``/
+        ``refine`` override either. ``quality`` maps to ``refine``
+        ("best" -> "unconstrained", "fast" -> "lp") only when ``refine``
+        itself is unset — the explicit knob wins."""
         cfg = resolve_config(self.preset, self.config, self.epsilon,
                              self.seed)
         overrides = {}
@@ -133,6 +150,11 @@ class PartitionRequest:
             overrides["balance"] = self.balance
         if self.kernel is not None:
             overrides["kernel"] = self.kernel
+        if self.refine is not None:
+            overrides["refine"] = self.refine
+        elif self.quality is not None:
+            overrides["refine"] = ("unconstrained" if self.quality == "best"
+                                   else "lp")
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides).validate()
         return cfg

@@ -1,7 +1,16 @@
-"""k-way refinement driver: balance -> LP refine -> balance (paper §4)."""
+"""k-way refinement drivers (paper §4 + the unconstrained tier).
+
+``balance_and_refine`` is the per-level entry point: restore
+feasibility, improve, re-restore. The improvement pass is selected by
+the ``refine`` knob — ``"lp"`` (default) is the paper's size-constrained
+LP; ``"unconstrained"`` is the Jet-style penalty-weighted search of
+``core.unconstrained`` whose trailing rebalance acts as the feasibility
+*afterburner* (docs/REFINEMENT.md). Either way the function never
+returns an infeasible partition.
+"""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -99,6 +108,16 @@ def lp_refine(g: Graph,
     return out2[perm]  # back to original ids: part[old] = out2[perm[old]]
 
 
+REFINE_MODES = ("lp", "unconstrained")
+
+
+def check_refine_mode(refine: str) -> str:
+    if refine not in REFINE_MODES:
+        raise ValueError(f"unknown refine mode {refine!r}; expected one "
+                         f"of {REFINE_MODES}")
+    return refine
+
+
 def balance_and_refine(g: Graph,
                        part: np.ndarray,
                        l_max_vec: np.ndarray,
@@ -106,10 +125,32 @@ def balance_and_refine(g: Graph,
                        num_iterations: int = 2,
                        num_chunks: int = 8,
                        seed: int = 0,
-                       kernel: str = "auto") -> np.ndarray:
-    """Paper's BalanceAndRefine: restore feasibility, improve, re-restore."""
+                       kernel: str = "auto",
+                       refine: str = "lp",
+                       stats: Optional[Dict] = None) -> np.ndarray:
+    """Paper's BalanceAndRefine: restore feasibility, improve, re-restore.
+
+    ``refine="unconstrained"`` swaps the improvement pass for the
+    penalty-weighted unconstrained search; the trailing rebalance then
+    acts as the feasibility afterburner, so the result satisfies the
+    budgets under either mode. ``stats`` (unconstrained mode only)
+    receives the ``penalty`` schedule and the afterburner's
+    ``repair_rounds``."""
+    check_refine_mode(refine)
     part = bal.rebalance(g, part, l_max_vec, parent=parent, seed=seed,
                          kernel=kernel)
+    if refine == "unconstrained":
+        from .unconstrained import unconstrained_refine
+        part = unconstrained_refine(g, part, l_max_vec, parent=parent,
+                                    num_iterations=num_iterations,
+                                    num_chunks=num_chunks, seed=seed,
+                                    stats=stats)
+        repair: Dict = {}
+        part = bal.rebalance(g, part, l_max_vec, parent=parent,
+                             seed=seed + 1, kernel=kernel, stats=repair)
+        if stats is not None:
+            stats["repair_rounds"] = repair.get("rounds")
+        return part
     part = lp_refine(g, part, l_max_vec, parent=parent,
                      num_iterations=num_iterations,
                      num_chunks=num_chunks, seed=seed)

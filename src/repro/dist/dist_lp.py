@@ -139,6 +139,42 @@ def _local_moves(lab_src_tab, tab, cw_like, budget_like, vw_pad,
     return move, tgt_safe, lab_cur
 
 
+def _penalized_moves(lab_src_tab, tab, bw_like, budget_like, vw_pad,
+                     c_src, c_dst, c_w, salt, pen_num, pen_den, n_loc):
+    """Unconstrained (Jet-style) gain/argmax stage: the budget mask of
+    ``_local_moves`` is replaced by a penalty-weighted score. A move
+    whose target block would exceed its budget pays
+    ``(own_conn // pen_den) * pen_num`` off its connection (integer-only,
+    ``pen <= own_conn < 2^31``), so round 0 is pure gain-greedy and later
+    rounds escalate the bar for overloading moves. No bounce follows —
+    feasibility is repaired by the trailing balancer (afterburner). Same
+    tie-breaks and move rule as the constrained stage otherwise, so the
+    two stages differ only in admission. See docs/REFINEMENT.md."""
+    lab_dst = tab[c_dst]
+    s_src, s_lab, s_w = lax.sort((c_src, lab_dst, c_w), num_keys=2)
+    conn = _group_conns(s_src, s_lab, s_w)
+    own_lab = lab_src_tab[s_src]
+    staying = s_lab == own_lab
+    own_conn = _own_connection(s_src, s_lab, s_w, lab_src_tab, n_loc)
+    # ``w > budget - c`` form: exact at the int32 boundary (w + c wraps)
+    over_after = bw_like[s_lab] > budget_like[s_lab] - vw_pad[s_src]
+    pen = jnp.where(over_after,
+                    (own_conn[s_src] // pen_den) * pen_num, 0)
+    # clamping to -1 loses nothing: a score < 0 can never pass the move
+    # rule (it would need score >= own_conn >= 0)
+    score = jnp.where(~staying, jnp.maximum(conn - pen, -1), -1)
+    best, target = _argmax_target(s_src, s_lab, score, bw_like[s_lab],
+                                  salt, n_loc)
+    lab_cur = lab_src_tab
+    tgt_safe = jnp.where(target < I32_MAX, target, lab_cur)
+    gain = best - own_conn
+    lighter = bw_like[tgt_safe] < bw_like[lab_cur] - vw_pad
+    move = (target < I32_MAX) & (best >= 0) & \
+        ((gain > 0) | ((gain == 0) & lighter))
+    move = move.at[n_loc].set(False)
+    return move, tgt_safe, lab_cur
+
+
 def _intra_pe_revert(move, tgt, lab_cur, vw_pad, cw, d_in, d_out,
                      salt, n_loc, num_labels, W):
     """Exact hash-ordered revert of this PE's chunk moves against its local
@@ -513,6 +549,131 @@ def dist_lp_refine(shards: GraphShards,
     fn = _build_refine_fn(mesh, P, k, shards.n_loc, shards.n_ghost, B,
                           num_iterations, use_grid, owner)
     part_pad = np.concatenate([part.astype(np.int64), [k]])  # sentinel gid=n
+    part_loc = part_pad[np.minimum(shards.local_gid, n)].astype(np.int32)
+    part_ghost = part_pad[np.minimum(shards.ghost_gid, n)].astype(np.int32)
+    salts = (np.arange(num_iterations * B, dtype=np.uint64).reshape(
+        num_iterations, B) * 0xC2B2AE35 + seed * 2654435761) % (2**32)
+    lmax32 = np.minimum(l_max_vec, int(_BIG)).astype(np.int32)
+    lab = fn(jnp.asarray(srcs), jnp.asarray(dsts), jnp.asarray(ws),
+             jnp.asarray(shards.vweights), jnp.asarray(part_loc),
+             jnp.asarray(part_ghost), jnp.asarray(shards.send_idx),
+             jnp.asarray(shards.recv_slot),
+             jnp.asarray(salts.astype(np.uint32)), jnp.asarray(lmax32))
+    lab = np.asarray(lab)
+    out = np.empty(n, dtype=np.int64)
+    valid = shards.local_gid < n
+    out[shards.local_gid[valid]] = lab[valid]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# distributed unconstrained (Jet-style) refinement
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _build_urefine_fn(mesh, P, k, n_loc, n_ghost, B, num_iterations,
+                      use_grid, owner=False):
+    """shard_map program for one unconstrained refinement call: the
+    ``_build_refine_fn`` skeleton with the penalized gain stage and *no*
+    bounce-back — moves commit even when they overload the target, the
+    weight tables track the overloaded truth, and the per-round penalty
+    (a Python constant of the unrolled iteration loop) escalates
+    ``it / num_iterations``. Both weight layouts stay bit-identical:
+    they present the same dense table at the top of each chunk and
+    commit the same deltas."""
+    kk = k + 1                   # sentinel block k
+    S_k = owner_table_width(kk, P)
+    L = P * S_k if owner else kk
+
+    def per_pe(src, dst, w, vw_loc, part_loc, part_ghost, send_idx,
+               recv_slot, salts, l_max):
+        src, dst, w = src[0], dst[0], w[0]
+        vw_loc, part_loc, part_ghost = vw_loc[0], part_loc[0], part_ghost[0]
+        send_idx, recv_slot = send_idx[0], recv_slot[0]
+        vw_pad = jnp.concatenate([vw_loc, jnp.zeros((1,), jnp.int32)])
+        dense0 = jnp.zeros((L,), jnp.int32).at[part_loc].add(vw_loc,
+                                                             mode="drop")
+        budget = jnp.concatenate([l_max.astype(jnp.int32),
+                                  jnp.full((L - k,), -_BIG, jnp.int32)])
+        if owner:
+            bw_state = psum_scatter_1d(dense0, "pe", P, use_grid=use_grid)
+            gidx = lax.axis_index("pe") * S_k + \
+                jnp.arange(S_k, dtype=jnp.int32)
+            bw_state = jnp.where(gidx == k, _BIG, bw_state)
+        else:
+            bw_state = lax.psum(dense0, "pe")
+            bw_state = bw_state.at[k].set(_BIG)
+        pen_den = jnp.int32(num_iterations)
+
+        def make_chunk_body(pen_num):
+            def chunk_body(carry, xs):
+                lab_loc, lab_ghost, bw_state = carry
+                c_src, c_dst, c_w, salt = xs
+                bw = all_gather_1d(bw_state, "pe", P, use_grid=use_grid) \
+                    if owner else bw_state
+                tab = jnp.concatenate(
+                    [lab_loc, lab_ghost, jnp.full((1,), k, jnp.int32)])
+                lab_src_tab = jnp.concatenate(
+                    [lab_loc, jnp.full((1,), k, jnp.int32)])
+                move, tgt, lab_cur = _penalized_moves(
+                    lab_src_tab, tab, bw, budget, vw_pad, c_src, c_dst,
+                    c_w, salt, pen_num, pen_den, n_loc)
+                if owner:
+                    bw_state = _commit_to_owners(move, tgt, lab_cur,
+                                                 vw_pad, bw_state, L, P,
+                                                 use_grid)
+                else:
+                    bw_state = _apply_and_sync(move, tgt, lab_cur, vw_pad,
+                                               bw_state, L)
+                lab_loc = jnp.where(move[:n_loc], tgt[:n_loc], lab_loc)
+                lab_ghost = halo_exchange(lab_loc, send_idx, recv_slot,
+                                          n_ghost, "pe", P,
+                                          use_grid=use_grid)
+                return (lab_loc, lab_ghost, bw_state), ()
+            return chunk_body
+
+        lab_loc = part_loc
+        lab_ghost = part_ghost
+        for it in range(num_iterations):
+            (lab_loc, lab_ghost, bw_state), _ = lax.scan(
+                make_chunk_body(jnp.int32(it)),
+                (lab_loc, lab_ghost, bw_state), (src, dst, w, salts[it]))
+        return lab_loc[None]
+
+    pe = PS("pe")
+    rep = PS()
+    fn = shard_map(per_pe, mesh=mesh,
+                   in_specs=(pe, pe, pe, pe, pe, pe, pe, pe, rep, rep),
+                   out_specs=pe, check_rep=True)
+    return jax.jit(fn)
+
+
+def dist_ulp_refine(shards: GraphShards,
+                    part: np.ndarray,
+                    l_max_vec: np.ndarray,
+                    num_iterations: int = 2,
+                    num_chunks: int = 8,
+                    seed: int = 0,
+                    use_grid: bool = True,
+                    mesh: Mesh = None,
+                    weights: str = "replicated") -> np.ndarray:
+    """Distributed unconstrained (Jet-style) refinement of a k-way
+    partition: penalty-weighted gains instead of the budget mask, no
+    bounce-back. The result may overload blocks by design — callers MUST
+    follow with ``rebalance`` / ``dist_rebalance`` (the afterburner;
+    ``dist_partitioner.dist_refine_and_balance`` does). Block weight
+    tables replicated or owner-sharded per ``weights``, bit-identical
+    either way. Same chunking/salt streams as ``dist_lp_refine``."""
+    P, n = shards.P, shards.n
+    owner = _check_weights_mode(weights)
+    _check_int32_weights(shards)
+    k = int(l_max_vec.shape[0])
+    mesh = _resolve_mesh(mesh, P)
+    srcs, dsts, ws = chunk_local_arcs(shards, num_chunks)
+    B = srcs.shape[1]
+    fn = _build_urefine_fn(mesh, P, k, shards.n_loc, shards.n_ghost, B,
+                           num_iterations, use_grid, owner)
+    part_pad = np.concatenate([part.astype(np.int64), [k]])  # sentinel
     part_loc = part_pad[np.minimum(shards.local_gid, n)].astype(np.int32)
     part_ghost = part_pad[np.minimum(shards.ghost_gid, n)].astype(np.int32)
     salts = (np.arange(num_iterations * B, dtype=np.uint64).reshape(

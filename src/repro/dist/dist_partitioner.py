@@ -38,7 +38,7 @@ from ..graphs.distribute import GraphShards, distribute_graph
 from ..graphs.format import Graph
 from .dist_balance import dist_enforce_cluster_weights, dist_rebalance
 from .dist_contraction import dist_contract
-from .dist_lp import dist_cluster, dist_lp_refine
+from .dist_lp import dist_cluster, dist_lp_refine, dist_ulp_refine
 
 
 def dist_refine_and_balance(g: Graph,
@@ -54,28 +54,43 @@ def dist_refine_and_balance(g: Graph,
                             weights: str = "replicated",
                             balance: str = "host",
                             kernel: str = "auto",
+                            refine: str = "lp",
                             balance_stats: Optional[Dict] = None
                             ) -> np.ndarray:
-    """Distributed BalanceAndRefine: sharded LP refinement (block weights
-    replicated or owner-sharded per ``weights``, races bounced) followed
-    by the exact global balancer so the result always satisfies the
-    per-block budgets. ``shards`` lets the driver pass the level's
-    existing distribution instead of re-sharding ``g``.
+    """Distributed BalanceAndRefine: sharded refinement (block weights
+    replicated or owner-sharded per ``weights``) followed by the exact
+    global balancer so the result always satisfies the per-block
+    budgets. ``shards`` lets the driver pass the level's existing
+    distribution instead of re-sharding ``g``.
 
-    ``balance`` picks where the exact balancer runs: ``"host"`` gathers
-    the level into ``core.balance.rebalance``'s single-chunk arc slab
-    (one O(m) gather per call), ``"dist"`` runs
-    ``dist_balance.dist_rebalance`` over the same shards the refinement
-    used — no host gather, O(P·top_m) pooled candidates per round,
-    bit-identical to ``"host"`` at P=1."""
+    ``refine`` picks the improvement pass: ``"lp"`` (default) is the
+    size-constrained LP with races bounced, ``"unconstrained"`` the
+    Jet-style penalty-weighted search of ``dist_ulp_refine`` whose
+    overloads the trailing balancer repairs (the afterburner —
+    docs/REFINEMENT.md). ``balance`` picks where that exact balancer
+    runs: ``"host"`` gathers the level into
+    ``core.balance.rebalance``'s single-chunk arc slab (one O(m) gather
+    per call), ``"dist"`` runs ``dist_balance.dist_rebalance`` over the
+    same shards the refinement used — no host gather, O(P·top_m) pooled
+    candidates per round, bit-identical to ``"host"`` at P=1."""
+    from ..core.refinement import check_refine_mode
+    check_refine_mode(refine)
     part = np.asarray(part, dtype=np.int64)
     l_max_vec = np.asarray(l_max_vec, dtype=np.int64)
     if shards is None:
         shards = distribute_graph(g, P)
-    part = dist_lp_refine(shards, part, l_max_vec,
-                          num_iterations=num_iterations,
-                          num_chunks=num_chunks, seed=seed,
-                          use_grid=use_grid, mesh=mesh, weights=weights)
+    if refine == "unconstrained":
+        part = dist_ulp_refine(shards, part, l_max_vec,
+                               num_iterations=num_iterations,
+                               num_chunks=num_chunks, seed=seed,
+                               use_grid=use_grid, mesh=mesh,
+                               weights=weights)
+    else:
+        part = dist_lp_refine(shards, part, l_max_vec,
+                              num_iterations=num_iterations,
+                              num_chunks=num_chunks, seed=seed,
+                              use_grid=use_grid, mesh=mesh,
+                              weights=weights)
     if balance == "dist":
         part = dist_rebalance(shards, part, l_max_vec, seed=seed + 1,
                               use_grid=use_grid, mesh=mesh,
@@ -183,14 +198,24 @@ def dist_partition_impl(g: Graph,
             num_chunks=cfg.num_chunks,
             seed=lvl_seed, use_grid=use_grid, mesh=mesh,
             shards=fshards, weights=cfg.weights, balance=cfg.balance,
-            kernel=cfg.kernel, balance_stats=bal_stats)
+            kernel=cfg.kernel, refine=cfg.refine,
+            balance_stats=bal_stats)
         if trace is not None:
-            trace_event(trace, phase="dist-uncoarsen", level=lvl, n=Gf.n,
-                        m=Gf.m, blocks=k, P=P, seed=lvl_seed,
-                        balance=cfg.balance,
-                        balance_rounds=bal_stats.get("rounds"),
-                        cut=metrics.edge_cut(Gf, part),
-                        time_s=round(time.perf_counter() - t0, 6))
+            rec = dict(phase="dist-uncoarsen", level=lvl, n=Gf.n,
+                       m=Gf.m, blocks=k, P=P, seed=lvl_seed,
+                       balance=cfg.balance,
+                       balance_rounds=bal_stats.get("rounds"),
+                       cut=metrics.edge_cut(Gf, part),
+                       time_s=round(time.perf_counter() - t0, 6))
+            if cfg.refine != "lp":
+                # unconstrained tier: the balancer doubles as the
+                # feasibility afterburner, so balance_rounds IS the
+                # repair-round count (docs/REFINEMENT.md)
+                from ..core.unconstrained import penalty_schedule
+                rec.update(refine=cfg.refine,
+                           penalty=penalty_schedule(cfg.refine_iterations),
+                           repair_rounds=bal_stats.get("rounds"))
+            trace_event(trace, **rec)
     from ..kernels import dispatch
     for rec in dispatch.drain_fallback_records():
         trace_event(trace, **rec)

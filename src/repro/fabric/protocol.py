@@ -152,6 +152,9 @@ def encode_request(req) -> Dict[str, Any]:
         "contraction": req.contraction,
         "weights": req.weights,
         "balance": req.balance,
+        "kernel": req.kernel,
+        "refine": req.refine,
+        "quality": req.quality,
     }
 
 
@@ -192,6 +195,9 @@ def decode_request(d: Dict[str, Any]):
         contraction=d.get("contraction"),
         weights=d.get("weights"),
         balance=d.get("balance"),
+        kernel=d.get("kernel"),
+        refine=d.get("refine"),
+        quality=d.get("quality"),
     )
 
 

@@ -15,7 +15,11 @@ of the three fused hot loops (docs/KERNELS.md):
 
 Fused wrappers also fall back to the composed path per call site when a
 shape exceeds the kernel's VMEM budget (see ``fits_vmem``); the fallback
-is safe because both paths are bit-identical by construction.
+is safe because both paths are bit-identical by construction, and it is
+*observable*, not silent: every decision is recorded via
+``report_fallback`` (a one-shot warning per kernel plus a
+``kernel-fallback`` trace record the drivers drain into the request
+trace through ``drain_fallback_records``).
 """
 from __future__ import annotations
 

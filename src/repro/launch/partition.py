@@ -57,6 +57,18 @@ def main() -> int:
                     help="hot-loop implementation on any backend: fused "
                          "Pallas kernels or the composed XLA pipeline "
                          "(bit-identical results) — docs/KERNELS.md")
+    ap.add_argument("--refine", default=None,
+                    choices=["lp", "unconstrained"],
+                    help="refinement algorithm on any backend: "
+                         "size-constrained LP (default) or the Jet-style "
+                         "unconstrained search with afterburner repair "
+                         "(better cuts, always feasible) — "
+                         "docs/REFINEMENT.md")
+    ap.add_argument("--quality", default=None,
+                    choices=["fast", "best"],
+                    help="serving-facing spelling of --refine (fast=lp, "
+                         "best=unconstrained); an explicit --refine wins "
+                         "— docs/SERVING.md")
     ap.add_argument("--trace", action="store_true",
                     help="also print the per-level trace records")
     args = ap.parse_args()
@@ -76,7 +88,8 @@ def main() -> int:
         seed=args.seed, backend=args.backend,
         devices=args.devices or 1,
         contraction=args.contraction, weights=args.weights,
-        balance=args.balance, kernel=args.kernel)
+        balance=args.balance, kernel=args.kernel, refine=args.refine,
+        quality=args.quality)
     engine = Partitioner()
     res = engine.run(req)
     print(json.dumps(res.summary()))

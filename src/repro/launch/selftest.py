@@ -9,7 +9,10 @@ implementation against the single-process reference: collectives
 round-trip, distributed clustering validity (replicated and
 owner-sharded weight tables), sharded contraction invariants
 (``--test contract``), distributed partition feasibility + quality
-under both memory models, the distributed balancer (``--test balance``:
+under both memory models, both refinement tiers (``--test refine``:
+size-constrained LP plus the Jet-style unconstrained pass, which must
+end feasible after afterburner repair and be bit-identical across
+weight-table layouts), the distributed balancer (``--test balance``:
 P=1 bit-identity with the host balancer, adversarial-start feasibility,
 sharded cluster-weight enforcement, and the no-host-gather trace
 assertion for ``balance="dist"``), grid vs direct all-to-all
@@ -222,6 +225,29 @@ def main() -> int:
         feas = metrics.is_feasible(g, part1, args.k, 0.03)
         report("refine.dist", feas and cut1 < cut0, cut_before=cut0,
                cut_after=cut1, feasible=feas)
+
+        # unconstrained tier: penalty-weighted moves + afterburner repair
+        # must end feasible and improve the same random start
+        part_u = dist_refine_and_balance(g, part0, lmax, P,
+                                         num_iterations=3, num_chunks=4,
+                                         seed=3, refine="unconstrained")
+        cut_u = metrics.edge_cut(g, part_u)
+        feas_u = metrics.is_feasible(g, part_u, args.k, 0.03)
+        report("refine.unconstrained", feas_u and cut_u < cut0,
+               cut_before=cut0, cut_after=cut_u, cut_lp=cut1,
+               feasible=feas_u)
+
+        # owner-sharded and replicated weight tables are bit-identical
+        # for the unconstrained pass (same dense table at every chunk top)
+        from repro.dist.dist_lp import dist_ulp_refine
+        shards_r = distribute_graph(g, P)
+        u_rep = dist_ulp_refine(shards_r, part0, lmax, num_iterations=3,
+                                num_chunks=4, seed=3,
+                                weights="replicated")
+        u_own = dist_ulp_refine(shards_r, part0, lmax, num_iterations=3,
+                                num_chunks=4, seed=3, weights="owner")
+        report("refine.unconstrained.owner_vs_replicated",
+               np.array_equal(u_rep, u_own))
 
     if args.test in ("all", "balance"):
         import dataclasses

@@ -37,7 +37,8 @@ class ServeMetrics:
     """Thread-safe counters + bounded reservoirs for one server."""
 
     _COUNTERS = ("submitted", "completed", "failed", "expired",
-                 "rejected", "retried", "batches", "coalesced")
+                 "rejected", "retried", "batches", "coalesced",
+                 "downgraded")
 
     def __init__(self, num_workers: int):
         self._lock = threading.Lock()
@@ -49,6 +50,7 @@ class ServeMetrics:
         self.retried = 0  # attempts re-routed to another mesh
         self.batches = 0  # multi-ticket attempts dispatched
         self.coalesced = 0  # tickets served off another ticket's run
+        self.downgraded = 0  # quality="best" dropped to "fast" (deadline)
         self.batch_size_max = 0
         self.per_worker_served = [0] * num_workers
         self._latencies: List[float] = []
@@ -91,6 +93,10 @@ class ServeMetrics:
     def on_reject(self) -> None:
         with self._lock:
             self.rejected += 1
+
+    def on_downgrade(self) -> None:
+        with self._lock:
+            self.downgraded += 1
 
     def on_batch(self, size: int, distinct: int) -> None:
         """One multi-ticket attempt: ``size`` tickets ran as one batch,
@@ -151,6 +157,7 @@ class ServeMetrics:
                 "retried": self.retried,
                 "batches": self.batches,
                 "coalesced": self.coalesced,
+                "downgraded": self.downgraded,
                 "batch_size_max": self.batch_size_max,
                 "per_worker_served": list(self.per_worker_served),
             }

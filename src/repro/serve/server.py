@@ -473,6 +473,16 @@ class PartitionServer:
         if self._closing.is_set():
             raise RuntimeError("server is closed")
         request.validate()
+        # quality routing (docs/SERVING.md): a deadline-bearing ticket
+        # that asked for quality="best" is downgraded to the fast tier
+        # at admission — the unconstrained refinement spends extra
+        # wall time on cut quality that a deadline-tight caller cannot
+        # use. Deterministic (pure function of the submit arguments),
+        # and an explicit refine= override is always honored.
+        if deadline_s is not None and getattr(request, "quality", None) \
+                == "best" and getattr(request, "refine", None) is None:
+            request = dataclasses.replace(request, quality="fast")
+            self._metrics.on_downgrade()
         # route on the backend that will actually run: the server-level
         # override replaces "auto" exactly as the worker sessions do.
         # Graph and GraphSpec both expose n — no materialization here.

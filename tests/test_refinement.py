@@ -1,0 +1,249 @@
+"""Refinement-tier tests (docs/REFINEMENT.md).
+
+Host-side properties of the Jet-style unconstrained pass: feasibility
+after afterburner repair from adversarial starts, the penalty schedule,
+and the default-path guarantee that ``refine="lp"`` is byte-identical to
+composing ``lp_refine`` + ``rebalance`` by hand (the pre-tier pipeline).
+The request-level ``refine``/``quality`` knobs are covered end to end,
+and a fast 2-device subprocess selftest checks the distributed twin
+(P=1 host-vs-dist equivalence lives here too: the two implementations
+chunk and salt differently, so the claim is feasibility plus comparable
+cuts, not bit-identity — the dist-internal bit-identities are in
+``selftest --test refine``).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.balance import rebalance
+from repro.core.deep_mgp import PartitionerConfig, partition
+from repro.core.refinement import (REFINE_MODES, balance_and_refine,
+                                   check_refine_mode, lp_refine)
+from repro.core.unconstrained import penalty_schedule, unconstrained_refine
+from repro.graphs import generators
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lmax_vec(g, k, eps=0.03):
+    return np.full(k, metrics.l_max(g.total_vweight, k, eps,
+                                    int(g.vweights.max())), dtype=np.int64)
+
+
+def assert_feasible(g, part, lvec):
+    k = int(lvec.shape[0])
+    assert part.min() >= 0 and part.max() < k, (part.min(), part.max(), k)
+    bw = metrics.block_weights(g, part, k)
+    assert np.all(bw <= lvec), (bw, lvec)
+
+
+# ---------------------------------------------------------------------------
+# penalty schedule
+# ---------------------------------------------------------------------------
+
+def test_penalty_schedule_shape():
+    # round 0 is fully unconstrained; the ramp approaches (R-1)/R < 1
+    assert penalty_schedule(1) == [0.0]
+    assert penalty_schedule(2) == [0.0, 0.5]
+    assert penalty_schedule(4) == [0.0, 0.25, 0.5, 0.75]
+    for r in penalty_schedule(7):
+        assert 0.0 <= r < 1.0
+
+
+def test_check_refine_mode():
+    assert set(REFINE_MODES) == {"lp", "unconstrained"}
+    for m in REFINE_MODES:
+        assert check_refine_mode(m) == m
+    with pytest.raises(ValueError, match="refine"):
+        check_refine_mode("jet")
+
+
+# ---------------------------------------------------------------------------
+# feasibility property: unconstrained + afterburner never emits an
+# infeasible partition, however bad the start
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,k", [(0, 8), (1, 16), (2, 4)])
+def test_unconstrained_tier_always_feasible(seed, k):
+    g = generators.make("rgg2d", 1500, 8.0, seed=seed)
+    lvec = lmax_vec(g, k)
+    rng = np.random.default_rng(seed)
+    part0 = rng.integers(0, k, g.n).astype(np.int64)
+    part0[rng.random(g.n) < 0.6] = 0          # heavily overloaded block 0
+    stats = {}
+    out = balance_and_refine(g, part0, lvec, num_iterations=3,
+                             num_chunks=4, seed=seed,
+                             refine="unconstrained", stats=stats)
+    assert_feasible(g, out, lvec)
+    assert stats["penalty"] == penalty_schedule(3)
+    assert stats["repair_rounds"] is not None
+
+
+def test_unconstrained_improves_cut():
+    g = generators.make("rgg2d", 2000, 8.0, seed=7)
+    k = 8
+    lvec = lmax_vec(g, k)
+    rng = np.random.default_rng(7)
+    part0 = rng.integers(0, k, g.n).astype(np.int64)
+    cut0 = metrics.edge_cut(g, part0)
+    out = unconstrained_refine(g, part0, lvec, num_iterations=3,
+                               num_chunks=4, seed=7)
+    assert metrics.edge_cut(g, out) < cut0
+
+
+# ---------------------------------------------------------------------------
+# default-path bit-identity: balance_and_refine(refine="lp") must equal
+# the hand-composed pre-tier pipeline byte for byte (no seed or call-
+# sequence drift from threading the new knob through)
+# ---------------------------------------------------------------------------
+
+def test_lp_path_bit_identical_to_composition():
+    g = generators.make("rgg2d", 1200, 8.0, seed=3)
+    k = 8
+    lvec = lmax_vec(g, k)
+    rng = np.random.default_rng(3)
+    part0 = rng.integers(0, k, g.n).astype(np.int64)
+
+    got = balance_and_refine(g, part0, lvec, num_iterations=2,
+                             num_chunks=4, seed=11, refine="lp")
+    want = rebalance(g, part0, lvec, seed=11)
+    want = lp_refine(g, want, lvec, num_iterations=2, num_chunks=4,
+                     seed=11)
+    want = rebalance(g, want, lvec, seed=12)
+    assert np.array_equal(got, want)
+
+
+def test_default_partition_ignores_unconstrained_module(monkeypatch):
+    # refine="lp" (the default) must never even touch the unconstrained
+    # kernels — the HEAD-bit-identity guarantee, enforced structurally
+    from repro.core import unconstrained as u
+
+    def boom(*a, **kw):
+        raise AssertionError("lp path must not call unconstrained_refine")
+
+    monkeypatch.setattr(u, "unconstrained_refine", boom)
+    g = generators.make("rgg2d", 900, 8.0, seed=2)
+    cfg = PartitionerConfig(contraction_limit=128, num_chunks=4)
+    part = partition(g, 8, cfg)
+    assert metrics.is_feasible(g, part, 8, cfg.epsilon)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: partition() under both modes, trace records
+# ---------------------------------------------------------------------------
+
+def test_partition_unconstrained_feasible_with_trace():
+    g = generators.make("rgg2d", 3000, 8.0, seed=5)
+    k = 8
+    cfg = PartitionerConfig(contraction_limit=128, num_chunks=4,
+                            refine="unconstrained")
+    trace = []
+    part = partition(g, k, cfg, trace=trace)
+    assert metrics.is_feasible(g, part, k, cfg.epsilon)
+    recs = [r for r in trace if r.get("phase") == "refine-mode"]
+    assert recs, trace
+    assert all(r["mode"] == "unconstrained" for r in recs)
+    stages = {r["stage"] for r in recs}
+    assert "final" in stages
+    for r in recs:
+        assert r["penalty"] == penalty_schedule(cfg.refine_iterations)
+        assert "repair_rounds" in r
+
+
+def test_partition_lp_emits_no_refine_mode_records():
+    g = generators.make("rgg2d", 1500, 8.0, seed=5)
+    cfg = PartitionerConfig(contraction_limit=128, num_chunks=4)
+    trace = []
+    partition(g, 8, cfg, trace=trace)
+    assert not [r for r in trace if r.get("phase") == "refine-mode"]
+
+
+def test_config_rejects_unknown_refine():
+    with pytest.raises(ValueError, match="refine"):
+        PartitionerConfig(refine="jet").validate()
+
+
+# ---------------------------------------------------------------------------
+# request-level knobs: refine / quality mapping
+# ---------------------------------------------------------------------------
+
+def test_request_quality_maps_to_refine():
+    from repro.api.request import GraphSpec, PartitionRequest
+    g = GraphSpec("rgg2d", 400, 8.0, seed=1)
+    cases = [
+        (dict(), "lp"),
+        (dict(quality="fast"), "lp"),
+        (dict(quality="best"), "unconstrained"),
+        (dict(quality="best", refine="lp"), "lp"),          # explicit wins
+        (dict(quality="fast", refine="unconstrained"), "unconstrained"),
+    ]
+    for kw, want in cases:
+        req = PartitionRequest(graph=g, k=4, **kw).validate()
+        assert req.resolve_config().refine == want, (kw, want)
+    with pytest.raises(ValueError, match="quality"):
+        PartitionRequest(graph=g, k=4, quality="ultra").validate()
+    with pytest.raises(ValueError, match="refine"):
+        PartitionRequest(graph=g, k=4, refine="jet").validate()
+
+
+def test_fabric_codec_round_trips_refine_knobs():
+    from repro.api.request import GraphSpec, PartitionRequest
+    from repro.fabric import protocol
+    req = PartitionRequest(graph=GraphSpec("rgg2d", 300, 8.0), k=4,
+                           kernel="composed", refine="unconstrained",
+                           quality="best")
+    dec = protocol.decode_request(protocol.encode_request(req))
+    assert (dec.kernel, dec.refine, dec.quality) == \
+        ("composed", "unconstrained", "best")
+
+
+# ---------------------------------------------------------------------------
+# P=1 dist-vs-host equivalence (not bit-identity: the dist twin chunks
+# local arcs and salts per-PE, the host pass reorders by degree bucket —
+# the claim is feasibility + comparable quality on the same start)
+# ---------------------------------------------------------------------------
+
+def test_dist_unconstrained_p1_matches_host_quality():
+    from repro.dist.dist_partitioner import dist_refine_and_balance
+    g = generators.make("rgg2d", 1500, 8.0, seed=9)
+    k = 8
+    lvec = lmax_vec(g, k)
+    rng = np.random.default_rng(9)
+    part0 = rng.integers(0, k, g.n).astype(np.int64)
+    cut0 = metrics.edge_cut(g, part0)
+
+    host = balance_and_refine(g, part0.copy(), lvec, num_iterations=3,
+                              num_chunks=4, seed=9,
+                              refine="unconstrained")
+    dist = dist_refine_and_balance(g, part0.copy(), lvec, P=1,
+                                   num_iterations=3, num_chunks=4,
+                                   seed=9, refine="unconstrained")
+    assert_feasible(g, host, lvec)
+    assert_feasible(g, dist, lvec)
+    ch, cd = metrics.edge_cut(g, host), metrics.edge_cut(g, dist)
+    assert ch < cut0 and cd < cut0
+    # same algorithm, different traversal order: cuts land close
+    assert abs(ch - cd) <= 0.35 * max(ch, cd), (ch, cd)
+
+
+def test_refine_selftest_2dev():
+    """Fast (non-slow) distributed coverage: both refinement tiers on 2
+    forced devices — LP improves + stays feasible, unconstrained beats
+    the same start after afterburner repair, and the owner-sharded
+    weight tables reproduce the replicated ones bit for bit."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest", "--devices", "2",
+         "--n", "1200", "--k", "4", "--test", "refine"],
+        capture_output=True, text=True, env=env, timeout=840)
+    lines = [json.loads(l) for l in proc.stdout.splitlines()
+             if l.startswith("{")]
+    assert proc.returncode == 0, (proc.stdout, proc.stderr[-2000:])
+    assert len(lines) == 3, lines
+    assert all(r["pass"] for r in lines), lines
